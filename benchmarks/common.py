@@ -1,0 +1,36 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time (us) of a jit'd callable."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def make_dataset(n_requests=400, product="product_a", seed=0,
+                 hist_init_max=60):
+    from repro.core.joiner import ImpressionLevelJoiner, RequestLevelJoiner
+    from repro.data.events import EventSimulator, EventStreamConfig
+    cfg = EventStreamConfig(n_requests=n_requests, product=product,
+                            hist_init_max=hist_init_max, seed=seed)
+    roo = RequestLevelJoiner().join(list(EventSimulator(cfg).stream()))
+    imp = ImpressionLevelJoiner().join(list(EventSimulator(cfg).stream()))
+    return roo, imp

@@ -1,0 +1,55 @@
+"""Paper Table 6: relative FLOPs/example for retrieval models.
+
+  baseline          — MLP user tower, impression-level   (1.0x)
+  HSTU (impression) — HSTU user tower, impression-level  (paper: 6.8x)
+  HSTU (ROO)        — HSTU user tower, ROO               (paper: 0.99x)
+
+FLOPs measured from the compiled forward via the loop-aware HLO analyzer,
+normalized per impression.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, make_dataset
+from benchmarks.throughput import _batch, _expand_to_impression_level
+from repro.configs import roo_models as rm
+from repro.launch.hlo_analysis import analyze
+from repro.models.two_tower import retrieval_loss_roo, two_tower_init
+
+
+def _flops(loss_fn, params, batch) -> float:
+    c = jax.jit(loss_fn).lower(params, batch).compile()
+    return analyze(c.as_text())["flops"]
+
+
+def run() -> None:
+    rng = jax.random.PRNGKey(0)
+    roo, _ = make_dataset(n_requests=300, product="product_b")
+    batch = _batch(roo)
+    expanded = _expand_to_impression_level(batch)
+    n_imp = float(batch.num_valid_impressions())
+
+    t0 = time.perf_counter()
+    base_cfg = rm.retrieval_config(hstu=False)
+    hstu_cfg = rm.retrieval_config(hstu=True)
+    bp = two_tower_init(rng, base_cfg)
+    hp = two_tower_init(rng, hstu_cfg)
+
+    f_base = _flops(lambda p, b: retrieval_loss_roo(p, base_cfg, b), bp,
+                    expanded) / n_imp
+    f_hstu_imp = _flops(lambda p, b: retrieval_loss_roo(p, hstu_cfg, b), hp,
+                        expanded) / n_imp
+    f_hstu_roo = _flops(lambda p, b: retrieval_loss_roo(p, hstu_cfg, b), hp,
+                        batch) / n_imp
+    us = (time.perf_counter() - t0) * 1e6
+    emit("table6_retrieval_flops", us,
+         f"baseline=1.0x;hstu_impression={f_hstu_imp / f_base:.2f}x;"
+         f"hstu_roo={f_hstu_roo / f_base:.2f}x;paper=6.8x/0.99x")
+
+
+if __name__ == "__main__":
+    run()

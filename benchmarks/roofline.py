@@ -1,0 +1,45 @@
+"""Roofline table from the dry-run artifacts (assignment deliverable g).
+
+Reads artifacts/dryrun/*.json and prints, per (arch x shape x mesh):
+compute/memory/collective seconds, dominant term, MODEL_FLOPS/HLO ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_all(mesh: str = "pod1", opt_level: str = "baseline"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(ART, f"*__{mesh}*.json"))):
+        d = json.load(open(f))
+        if d.get("opt_level", "baseline") != opt_level:
+            continue
+        rows.append(d)
+    return rows
+
+
+def run() -> None:
+    rows = load_all("pod1")
+    if not rows:
+        emit("roofline", 0.0, "no_artifacts=run_dryrun_first")
+        return
+    for d in rows:
+        r = d["roofline"]
+        total = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / total if total else 0.0
+        ur = d.get("useful_flops_ratio")
+        emit(f"roofline_{d['arch']}_{d['shape']}", d["compile_s"] * 1e6,
+             f"compute_s={r['compute_s']:.4g};memory_s={r['memory_s']:.4g};"
+             f"collective_s={r['collective_s']:.4g};dom={r['dominant']};"
+             f"roofline_frac={frac:.3f};useful_ratio={ur:.3f}"
+             if ur else f"dom={r['dominant']}")
+
+
+if __name__ == "__main__":
+    run()

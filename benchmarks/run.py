@@ -1,0 +1,27 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  table3_join_quality_*    — Table 3 label-mismatch rates
+  table4_storage_*         — Table 4 sample-volume increase
+  table5_throughput_*      — Table 5 ROO vs impression training throughput
+  table6_retrieval_flops   — Table 6 relative FLOPs/example
+  seq_amortization_*       — §3.3 encoder amortization (9.82x example)
+  roofline_*               — §Roofline terms per (arch x shape) from dry-run
+"""
+import sys
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (join_quality, retrieval_flops, roofline,
+                            seq_amortization, storage_volume, throughput)
+    storage_volume.run()
+    join_quality.run()
+    throughput.run()
+    retrieval_flops.run()
+    seq_amortization.run()
+    roofline.run()
+
+
+if __name__ == "__main__":
+    main()

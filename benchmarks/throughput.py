@@ -1,0 +1,90 @@
+"""Paper Table 5: training throughput, ROO vs impression-level, by stage.
+
+Same model, same data; the ONLY variation is the training paradigm:
+  impression — RO features expanded to B_NRO (user side computed per
+               impression; the established practice);
+  ROO        — user side computed at B_RO and fanned out once.
+
+Throughput is impressions/second of the jit'd train step on this host;
+the ratio is the Table 5 quantity (hardware-independent to first order
+because both paths run the same kernels, just different batch dims).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, make_dataset, time_fn
+from repro.configs import roo_models as rm
+from repro.data.batcher import BatcherConfig, ROOBatcher
+from repro.models.lsr import lsr_init, lsr_loss
+from repro.models.two_tower import (esr_loss_roo, retrieval_loss_roo,
+                                    two_tower_init)
+from repro.train.optim import adam
+
+
+def _batch(roo, b_ro=32, b_nro=192):
+    return next(ROOBatcher(BatcherConfig(
+        b_ro=b_ro, b_nro=b_nro, hist_len=64)).batches(roo))
+
+
+def _step_fn(loss_fn, params):
+    opt = adam(1e-3)
+    state = {"p": params, "o": opt.init(params)}
+
+    @jax.jit
+    def step(state, batch):
+        loss, g = jax.value_and_grad(lambda p: loss_fn(p, batch))(state["p"])
+        new_p, new_o = opt.update(g, state["o"], state["p"])
+        return {"p": new_p, "o": new_o}, loss
+
+    return step, state
+
+
+def _expand_to_impression_level(batch):
+    """Impression-level training: duplicate each request's RO features into
+    one degenerate request per impression (B_RO == B_NRO)."""
+    from repro.core.expansion import expand
+    from repro.core.roo_batch import ROOBatch
+    eb = expand(batch)
+    return ROOBatch(
+        ro_dense=eb.ro_dense, ro_sparse=None,
+        history_ids=eb.history_ids, history_actions=eb.history_actions,
+        history_lengths=eb.history_lengths, nro_dense=eb.nro_dense,
+        nro_sparse=None, item_ids=eb.item_ids, labels=eb.labels,
+        num_impressions=eb.valid.astype(jnp.int32),
+        segment_ids=jnp.where(eb.valid, jnp.arange(eb.batch_size),
+                              eb.batch_size).astype(jnp.int32))
+
+
+def run() -> None:
+    rng = jax.random.PRNGKey(0)
+    roo, _ = make_dataset(n_requests=300, product="product_b")
+    batch = _batch(roo)
+    n_imp = float(batch.num_valid_impressions())
+    expanded = _expand_to_impression_level(batch)
+
+    cases = []
+    tt = rm.retrieval_config()
+    cases.append(("retrieval", tt, two_tower_init(rng, tt),
+                  lambda p, b: retrieval_loss_roo(p, tt, b)))
+    esr = rm.esr_config()
+    cases.append(("esr", esr, two_tower_init(rng, esr),
+                  lambda p, b: esr_loss_roo(p, esr, b)))
+    lsr = rm.lsr_config()
+    cases.append(("lsr", lsr, lsr_init(rng, lsr),
+                  lambda p, b: lsr_loss(p, lsr, b)))
+
+    for name, cfg, params, loss in cases:
+        step, state = _step_fn(loss, params)
+        us_roo = time_fn(lambda s, b: step(s, b)[0], state, batch)
+        us_imp = time_fn(lambda s, b: step(s, b)[0], state, expanded)
+        inc = 100.0 * (us_imp / us_roo - 1.0)
+        emit(f"table5_throughput_{name}", us_roo,
+             f"imp_us={us_imp:.0f};roo_us={us_roo:.0f};"
+             f"throughput_increase_pct={inc:.0f};"
+             f"imps_per_s_roo={n_imp / us_roo * 1e6:.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Storage walk-through (paper §2.1 + Table 4): how the request-level schema
+removes duplication at the source, per column group.
+
+Run:  PYTHONPATH=src python examples/storage_analysis.py
+"""
+import random
+
+from repro.core.joiner import ImpressionLevelJoiner, RequestLevelJoiner
+from repro.data.events import EventSimulator, EventStreamConfig
+from repro.data.storage import (encode_impression_table, encode_roo_table,
+                                sample_volume_increase)
+
+
+def main():
+    cfg = EventStreamConfig(n_requests=300, product="product_b",
+                            hist_init_max=200, seed=0)
+    roo = RequestLevelJoiner().join(list(EventSimulator(cfg).stream()))
+    imp = ImpressionLevelJoiner().join(list(EventSimulator(cfg).stream()))
+    random.Random(0).shuffle(imp)
+    random.Random(0).shuffle(roo)
+
+    n_imp = len(imp)
+    ci = encode_impression_table(imp)
+    cr = encode_roo_table(roo)
+    print(f"{n_imp} impressions in {len(roo)} requests "
+          f"({n_imp / len(roo):.1f} per request)\n")
+    print(f"{'column':<14}{'impression-level':>18}{'request-level':>16}{'saving':>9}")
+    for k in ("ro_dense", "ro_idlist", "history", "item_dense",
+              "item_idlist", "labels", "total"):
+        a, b = ci.get(k, 0), cr.get(k, 0)
+        save = 100 * (1 - b / a) if a else 0.0
+        print(f"{k:<14}{a:>16}B {b:>14}B {save:>7.1f}%")
+    res = sample_volume_increase(imp, roo)
+    print(f"\n=> {res['sample_volume_increase_pct']:.0f}% more training "
+          f"samples in the same storage (paper Table 4: 43-150%)")
+
+
+if __name__ == "__main__":
+    main()

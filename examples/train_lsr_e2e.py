@@ -1,0 +1,92 @@
+"""End-to-end driver: train a ~100M-parameter ROO LSR model for a few
+hundred steps with checkpointing, preemption-safe resume, and NE tracking.
+
+Run:  PYTHONPATH=src python examples/train_lsr_e2e.py [--steps 300]
+
+The model is embedding-dominated like production DLRMs: a 1.5M-row item
+table + 64-dim embeddings + UserArch/HSTU -> ~100M params. Training uses
+the mixed optimizer (row-wise Adagrad for tables, Adam for dense) and the
+fault-tolerant Trainer (atomic async checkpoints; rerun the script after
+killing it and it resumes from the last commit).
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hstu import HSTUConfig
+from repro.core.joiner import RequestLevelJoiner
+from repro.data.batcher import BatcherConfig, ROOBatcher
+from repro.data.events import EventSimulator, EventStreamConfig
+from repro.models.lsr import LSRConfig, lsr_init, lsr_logits_roo, lsr_loss
+from repro.train.loop import Trainer, TrainLoopConfig
+from repro.train.metrics import normalized_entropy
+from repro.train.optim import adam, default_is_embedding, make_mixed, \
+    rowwise_adagrad
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/roo_lsr_ckpt")
+    args = ap.parse_args()
+
+    n_items = 1_500_000
+    cfg = LSRConfig(n_items=n_items, mode="userarch_hstu",
+                    hstu=HSTUConfig(d_model=64, n_heads=2, d_qk=32, d_v=32,
+                                    n_layers=2, max_rel_pos=64))
+    rng = jax.random.PRNGKey(0)
+
+    def init_params():
+        p = lsr_init(rng, cfg)
+        n = sum(x.size for x in jax.tree.leaves(p))
+        print(f"params: {n / 1e6:.1f}M")
+        return p
+
+    # data: synthetic stream -> request-level join -> ROO batches
+    # (Zipfian item popularity, as in production catalogs — the 1.5M-row
+    # table stays mostly cold, exactly like real DLRM tables)
+    events = list(EventSimulator(EventStreamConfig(
+        n_requests=2500, n_items=n_items, n_users=500,
+        hist_init_max=48, item_zipf=0.85, seed=0)).stream())
+    samples = RequestLevelJoiner().join(events)
+    batcher = ROOBatcher(BatcherConfig(b_ro=32, b_nro=192, hist_len=64))
+    batches = list(batcher.batches(samples))
+    train_b, test_b = batches[:-2], batches[-2:]
+    print(f"{len(samples)} requests -> {len(batches)} batches")
+
+    def batch_iter(start_step):
+        def gen():
+            i = start_step
+            while True:
+                yield train_b[i % len(train_b)]
+                i += 1
+        return gen()
+
+    opt = make_mixed(adam(1e-3), rowwise_adagrad(0.05), default_is_embedding)
+    trainer = Trainer(
+        lambda p, b, r: lsr_loss(p, cfg, b), opt,
+        TrainLoopConfig(total_steps=args.steps, ckpt_every=100,
+                        log_every=25, ckpt_dir=args.ckpt_dir),
+        init_params)
+
+    t0 = time.time()
+    state = trainer.run(batch_iter, rng)
+    dt = time.time() - t0
+    for h in trainer.history:
+        print(f"  step {h['step']:4d}  loss={h['loss']:.4f}  "
+              f"{h['steps_per_s']:.1f} steps/s")
+    print(f"trained to step {int(state['step'])} in {dt:.1f}s")
+
+    # NE on held-out batches
+    nes = []
+    for b in test_b:
+        logits = lsr_logits_roo(state["params"], cfg, b)[:, 0]
+        w = b.impression_mask().astype(jnp.float32)
+        nes.append(float(normalized_entropy(logits, b.labels[:, 0], w)))
+    print(f"held-out NE: {sum(nes) / len(nes):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Render the EXPERIMENTS.md roofline + dry-run tables from artifacts."""
+import glob
+import json
+import os
+import sys
+
+ART = "artifacts/dryrun"
+
+
+def rows(mesh):
+    out = []
+    for f in sorted(glob.glob(f"{ART}/*__{mesh}.json")):
+        d = json.load(open(f))
+        if d.get("opt_level", "baseline") != "baseline":
+            continue
+        out.append(d)
+    return out
+
+
+def fmt(v, digits=3):
+    if v == 0:
+        return "0"
+    if v < 1e-3 or v >= 1e4:
+        return f"{v:.2e}"
+    return f"{v:.{digits}g}"
+
+
+def main():
+    print("### Single-pod (16x16 = 256 chips) roofline — all 40 cells\n")
+    print("| arch | shape | kind | compute_s | memory_s | collective_s | "
+          "dominant | MODEL/HLO | bottleneck note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    notes = {
+        "memory": "activation/param streaming",
+        "collective": "cross-chip bytes",
+        "compute": "MXU-bound",
+    }
+    for d in rows("pod1"):
+        r = d["roofline"]
+        ur = d.get("useful_flops_ratio")
+        print(f"| {d['arch']} | {d['shape']} | {d['kind']} | "
+              f"{fmt(r['compute_s'])} | {fmt(r['memory_s'])} | "
+              f"{fmt(r['collective_s'])} | {r['dominant']} | "
+              f"{ur:.2f} | {notes[r['dominant']]} |")
+    print("\n### Multi-pod (2x16x16 = 512 chips) dry-run — all 40 cells\n")
+    print("| arch | shape | compile | peak GB/dev | collective B/dev | ok |")
+    print("|---|---|---|---|---|---|")
+    for d in rows("pod2"):
+        pk = d["memory_analysis"]["peak_bytes"] or 0
+        print(f"| {d['arch']} | {d['shape']} | {d['compile_s']:.1f}s | "
+              f"{pk / 1e9:.2f} | {fmt(d['collective_bytes'])} | yes |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""repro — Request-Only Optimization (ROO) recommendation framework in JAX.
+
+Top-level layout:
+  core/         the paper's contribution: ROO batch, joiners, fanout, LCE, HSTU
+  data/         jagged tensors, event simulation, columnar storage, batching
+  embeddings/   EmbeddingBag + sharded embedding collections
+  models/       recsys / lm / gnn model zoo
+  kernels/      Pallas TPU kernels (+ jnp oracles)
+  distributed/  partition specs + collective helpers
+  train/        optimizers, loop, checkpointing, metrics
+  serve/        ROO inference
+  launch/       mesh, dryrun, train drivers
+  configs/      one config per assigned architecture
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,53 @@
+"""Cell framework: every (architecture x input-shape) dry-run cell is a
+``Cell`` — abstract state + abstract inputs + a step function + shardings.
+
+``dryrun.py`` lowers jax.jit(cell.step, in_shardings=...) .lower(state,
+**inputs).compile() for each cell on each production mesh; nothing is ever
+allocated (ShapeDtypeStruct stand-ins only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import ShardingPlan
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str                               # "train" | "serve"
+    step: Callable                          # (state, **inputs) -> outputs
+    abstract_state: Callable[[], Any]       # pytree of ShapeDtypeStruct
+    state_pspecs: Callable[[ShardingPlan], Any]   # pytree of PartitionSpec
+    input_specs: Callable[[], Dict[str, Any]]
+    input_pspecs: Callable[[ShardingPlan], Dict[str, Any]]
+    model_flops: float = 0.0                # analytic "useful" FLOPs per step
+    notes: str = ""
+
+    def shardings(self, plan: ShardingPlan):
+        """(in_shardings tuple, None) for jit: (state, inputs-dict)."""
+        def to_ns(spec_tree, aval_tree):
+            return jax.tree.map(
+                lambda s: NamedSharding(plan.mesh, s if s is not None else P()),
+                spec_tree, is_leaf=lambda x: isinstance(x, P) or x is None)
+        st = to_ns(self.state_pspecs(plan), None)
+        ins = to_ns(self.input_pspecs(plan), None)
+        return st, ins
+
+
+def pad_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def round_batch(n: int, plan_divisor: int = 32) -> int:
+    return pad_to(n, plan_divisor)

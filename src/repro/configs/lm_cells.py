@@ -1,0 +1,153 @@
+"""Cell builders for the LM-family architectures (train / prefill / decode).
+
+Shapes (assigned):
+  train_4k     seq 4096,   global_batch 256   -> train_step (loss+grad+adam)
+  prefill_32k  seq 32768,  global_batch 32    -> prefill (forward + KV cache)
+  decode_32k   seq 32768,  global_batch 128   -> serve_step (1 new token)
+  long_500k    seq 524288, global_batch 1     -> serve_step (1 new token)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import Cell, sds
+from repro.distributed.sharding import ShardingPlan
+from repro.models.lm.decode import CacheSpec, cache_specs, init_cache, prefill, serve_step
+from repro.models.lm.transformer import LMConfig, lm_init, lm_loss, lm_param_specs
+from repro.train.optim import adam
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def _attn_flops(cfg: LMConfig, b: int, s: int, causal: bool = True) -> float:
+    f = 4.0 * b * s * s * cfg.n_heads * cfg.d_head * cfg.n_layers
+    return f * (0.5 if causal else 1.0)
+
+
+def _opt():
+    return adam(lr=1e-4, b1=0.9, b2=0.95)
+
+
+def build_lm_cell(cfg: LMConfig, shape_name: str, plan: ShardingPlan,
+                  opt_level: str = "baseline") -> Cell:
+    """opt_level:
+      flash      — q-chunked attention for training seqs (no (S,S) score
+                   materialization in HBM);
+      flash_bf16 — + bf16 parameter storage (halves FSDP all-gather bytes;
+                   fp32 Adam moments retained)."""
+    import dataclasses as _dc
+    if opt_level in ("flash", "flash_bf16"):
+        cfg = _dc.replace(cfg, full_attn_max_seq=1024, q_chunk=1024)
+    if opt_level == "flash_bf16":
+        cfg = _dc.replace(cfg, param_dtype="bfloat16")
+    if opt_level == "megatron_sp":
+        # explicit shard_map SP<->TP schedule; head count padded to the TP
+        # degree (zero-padded projections — mathematically identical)
+        tp = 16
+        h_pad = ((cfg.n_heads + tp - 1) // tp) * tp
+        cfg = _dc.replace(cfg, use_spmd_layer=True, n_heads=h_pad,
+                          param_dtype="bfloat16")
+    sh = LM_SHAPES[shape_name]
+    b, s = sh["batch"], sh["seq"]
+    kind = sh["kind"]
+    opt = _opt()
+
+    def abstract_params():
+        return jax.eval_shape(lambda: lm_init(jax.random.PRNGKey(0), cfg))
+
+    pspecs = lm_param_specs(cfg, plan)
+
+    if kind == "train":
+        def abstract_state():
+            params = abstract_params()
+            opt_state = jax.eval_shape(opt.init, params)
+            return {"params": params, "opt": opt_state,
+                    "step": sds((), jnp.int32)}
+
+        def state_pspecs(plan):
+            return {"params": pspecs,
+                    "opt": {"m": pspecs, "v": pspecs, "t": P()},
+                    "step": P()}
+
+        def step(state, inputs):
+            tokens, labels = inputs["tokens"], inputs["labels"]
+            loss, grads = jax.value_and_grad(
+                lambda p: lm_loss(p, cfg, tokens, labels, plan))(state["params"])
+            new_p, new_opt = opt.update(grads, state["opt"], state["params"])
+            return {"params": new_p, "opt": new_opt,
+                    "step": state["step"] + 1}, loss
+
+        def input_specs():
+            return {"tokens": sds((b, s), jnp.int32),
+                    "labels": sds((b, s), jnp.int32)}
+
+        def input_pspecs(plan):
+            ba = plan.batch_axes
+            return {"tokens": P(ba, None), "labels": P(ba, None)}
+
+        flops = 6.0 * cfg.n_active_params() * b * s + 3 * _attn_flops(cfg, b, s)
+        return Cell(cfg.name, shape_name, "train", step, abstract_state,
+                    state_pspecs, input_specs, input_pspecs, flops)
+
+    # ---- serving cells --------------------------------------------------------
+    if shape_name == "long_500k":
+        cs = CacheSpec(batch_axes=None,
+                       seq_axes=tuple(plan.batch_axes) + (plan.model_axis,))
+    else:
+        cs = CacheSpec(batch_axes=plan.batch_axes, seq_axes=plan.model_axis)
+
+    def abstract_state():
+        return {"params": abstract_params()}
+
+    def state_pspecs(plan):
+        return {"params": pspecs}
+
+    if kind == "prefill":
+        def step(state, inputs):
+            tokens = inputs["tokens"]
+            logits, cache = prefill(state["params"], cfg, tokens, plan,
+                                    s_max=s, cs=cs)
+            return logits, cache
+
+        def input_specs():
+            return {"tokens": sds((b, s), jnp.int32)}
+
+        def input_pspecs(plan):
+            return {"tokens": P(plan.batch_axes, None)}
+
+        flops = 2.0 * cfg.n_active_params() * b * s + _attn_flops(cfg, b, s)
+        return Cell(cfg.name, shape_name, "serve", step, abstract_state,
+                    state_pspecs, input_specs, input_pspecs, flops)
+
+    # decode
+    def step(state, inputs):
+        cache, tokens = inputs["cache"], inputs["tokens"]
+        logits, new_cache = serve_step(state["params"], cfg, cache, tokens,
+                                       plan, cs=cs)
+        return logits, new_cache
+
+    def input_specs():
+        cache = jax.eval_shape(
+            functools.partial(init_cache, cfg, b, s, jnp.bfloat16))
+        return {"cache": cache, "tokens": sds((b, 1), jnp.int32)}
+
+    def input_pspecs(plan):
+        return {"cache": cache_specs(cfg, plan, cs),
+                "tokens": P(cs.batch_axes, None)}
+
+    flops = (2.0 * cfg.n_active_params() * b
+             + 4.0 * b * s * cfg.n_heads * cfg.d_head * cfg.n_layers)
+    return Cell(cfg.name, shape_name, "serve", step, abstract_state,
+                state_pspecs, input_specs, input_pspecs, flops,
+                notes="long-context decode is O(S*d)/step; 500k prefill "
+                      "(quadratic) intentionally not lowered" if s > 100000 else "")

@@ -1,0 +1,141 @@
+"""Cell builders for MACE (GNN family).
+
+Shapes (assigned):
+  full_graph_sm   N=2 708  E=10 556   d_feat=1 433  (Cora-like node class., 7)
+  minibatch_lg    sampled subgraph: 1 024 seeds, fanout 15-10 (Reddit-like,
+                  d_feat=602, 41 classes) -> N≈170k, E≈169k capacities
+  ogb_products    N=2 449 029 E=61 859 140 d_feat=100 (47 classes, full batch)
+  molecule        128 graphs x (30 nodes, 64 edges) -> block-diagonal batch,
+                  energy regression
+
+Node/edge arrays shard over ALL mesh axes (graph work has no TP dimension;
+the whole chip grid is data-parallel over edges). Counts are padded to
+mesh-size multiples; padding edges are masked. Non-geometric graphs get a
+synthetic 3-D position channel (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import Cell, pad_to, sds
+from repro.distributed.sharding import ShardingPlan
+from repro.models.gnn.irreps import DIMS, cg_paths
+from repro.models.gnn.mace import MACEConfig, mace_forward, mace_init
+from repro.train.optim import adam
+
+MACE_SHAPES = {
+    "full_graph_sm": dict(n_nodes=2708, n_edges=10556, d_feat=1433,
+                          n_graphs=1, n_out=7, task="node"),
+    "minibatch_lg": dict(n_nodes=170496, n_edges=169984, d_feat=602,
+                         n_graphs=1, n_out=41, task="node"),
+    "ogb_products": dict(n_nodes=2449029, n_edges=61859140, d_feat=100,
+                         n_graphs=1, n_out=47, task="node"),
+    "molecule": dict(n_nodes=3840, n_edges=8192, d_feat=16,
+                     n_graphs=128, n_out=1, task="energy"),
+}
+
+
+def mace_flops(cfg: MACEConfig, n_nodes: int, n_edges: int) -> float:
+    """Analytic forward FLOPs: CG messages + products + linears."""
+    c = cfg.channels
+    paths = cg_paths(cfg.l_max)
+    cg_cost = sum(DIMS[l1] * DIMS[l2] * DIMS[l3] for l1, l2, l3 in paths)
+    msg = 2.0 * n_edges * cg_cost * c                      # edge CG products
+    prod = 2.0 * n_nodes * cg_cost * c * (cfg.correlation - 1)
+    mix = 2.0 * n_nodes * sum(DIMS[l] for l in range(cfg.l_max + 1)) * c * c \
+        * (2 + cfg.correlation)
+    radial = 2.0 * n_edges * (cfg.n_rbf * 64 + 64 * len(paths) * c)
+    return cfg.n_layers * (msg + prod + mix + radial)
+
+
+def build_mace_cell(shape_name: str, plan: ShardingPlan,
+                    opt_level: str = "baseline") -> Cell:
+    """opt_level "hoist": per-layer (not per-CG-path) edge gathers +
+    grouped segment-sums — identical math, ~5x fewer cross-shard
+    gather/scatter collectives."""
+    sh = MACE_SHAPES[shape_name]
+    n_dev = 1
+    if plan.enabled:
+        n_dev = plan.mesh.size
+    axes_all = (tuple(plan.batch_axes) + (plan.model_axis,)) if plan.enabled \
+        else None
+    n = pad_to(sh["n_nodes"], max(n_dev, 1))
+    e = pad_to(sh["n_edges"], max(n_dev, 1))
+    g = sh["n_graphs"]
+    cfg = MACEConfig(n_feat_in=sh["d_feat"], n_out=sh["n_out"])
+    opt = adam(1e-3)
+
+    def init_fn():
+        return mace_init(jax.random.PRNGKey(0), cfg)
+
+    def abstract_state():
+        params = jax.eval_shape(init_fn)
+        return {"params": params, "opt": jax.eval_shape(opt.init, params),
+                "step": sds((), jnp.int32)}
+
+    def state_pspecs(plan):
+        params = jax.eval_shape(init_fn)
+        pp = jax.tree.map(lambda _: P(), params)
+        return {"params": pp, "opt": {"m": pp, "v": pp, "t": P()},
+                "step": P()}
+
+    def fwd(p, inputs):
+        return mace_forward(
+            p, cfg, inputs["node_feat"], inputs["positions"],
+            inputs["edge_index"], inputs["edge_mask"], inputs["graph_ids"],
+            g, node_mask=inputs["node_mask"],
+            hoist_gathers=opt_level.startswith("hoist"),
+            msg_dtype=jnp.bfloat16 if opt_level == "hoist_bf16" else None)
+
+    def cell_loss(p, inputs):
+        out = fwd(p, inputs)
+        if sh["task"] == "energy":
+            return jnp.mean((out["energy"][:, 0] - inputs["targets"]) ** 2)
+        logits = out["node_out"]                          # (N, n_classes)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, inputs["labels"][:, None], axis=1)[:, 0]
+        w = inputs["label_mask"].astype(nll.dtype)
+        return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+    def step(state, inputs):
+        loss, grads = jax.value_and_grad(
+            lambda p: cell_loss(p, inputs))(state["params"])
+        new_p, new_opt = opt.update(grads, state["opt"], state["params"])
+        return {"params": new_p, "opt": new_opt,
+                "step": state["step"] + 1}, loss
+
+    def specs_fn():
+        s = {"node_feat": sds((n, sh["d_feat"])),
+             "positions": sds((n, 3)),
+             "edge_index": sds((e, 2), jnp.int32),
+             "edge_mask": sds((e,), jnp.bool_),
+             "graph_ids": sds((n,), jnp.int32),
+             "node_mask": sds((n,), jnp.bool_)}
+        if sh["task"] == "energy":
+            s["targets"] = sds((g,))
+        else:
+            s["labels"] = sds((n,), jnp.int32)
+            s["label_mask"] = sds((n,), jnp.bool_)
+        return s
+
+    def pspecs_fn(plan):
+        ax = axes_all
+        s = {"node_feat": P(ax, None), "positions": P(ax, None),
+             "edge_index": P(ax, None), "edge_mask": P(ax),
+             "graph_ids": P(ax), "node_mask": P(ax)}
+        if sh["task"] == "energy":
+            s["targets"] = P(None)
+        else:
+            s["labels"] = P(ax)
+            s["label_mask"] = P(ax)
+        return s
+
+    flops = mace_flops(cfg, n, e) * 3          # fwd+bwd
+    return Cell("mace", shape_name, "train", step, abstract_state,
+                state_pspecs, specs_fn, pspecs_fn, flops,
+                notes="synthetic 3-D positions for non-geometric graphs")

@@ -1,0 +1,41 @@
+"""Architecture registry: --arch <id> resolution for launch/dryrun/train."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+_MODULES = {
+    "starcoder2-15b": "repro.configs.starcoder2_15b",
+    "deepseek-coder-33b": "repro.configs.deepseek_coder_33b",
+    "phi3-medium-14b": "repro.configs.phi3_medium_14b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b_a800m",
+    "mace": "repro.configs.mace",
+    "mind": "repro.configs.mind",
+    "bert4rec": "repro.configs.bert4rec",
+    "dlrm-mlperf": "repro.configs.dlrm_mlperf",
+    "dien": "repro.configs.dien",
+    # the paper's own ROO models (selectable for train/bench, not dry-run cells)
+    "roo-lsr": "repro.configs.roo_models",
+    "roo-esr": "repro.configs.roo_models",
+    "roo-retrieval": "repro.configs.roo_models",
+    "hstu-gr": "repro.configs.roo_models",
+}
+
+ASSIGNED = ["starcoder2-15b", "deepseek-coder-33b", "phi3-medium-14b",
+            "qwen3-moe-235b-a22b", "granite-moe-3b-a800m", "mace",
+            "mind", "bert4rec", "dlrm-mlperf", "dien"]
+
+
+def get_arch(arch_id: str):
+    return importlib.import_module(_MODULES[arch_id])
+
+
+def all_cells() -> List[tuple]:
+    """All 40 (arch, shape) dry-run cells."""
+    out = []
+    for a in ASSIGNED:
+        mod = get_arch(a)
+        for s in mod.SHAPES:
+            out.append((a, s))
+    return out

@@ -1,0 +1,8 @@
+"""ROO core — the paper's primary contribution.
+
+Request-level data (ROOBatch), the request-level joiner (Algorithm 1), the
+RO->NRO fanout, the ROO expansion adapter (App. C), and the ROO model
+components (LCE/UserArch, HSTU, ROO sequential modeling + masks).
+"""
+from repro.core.roo_batch import ROOBatch, segment_ids_from_counts
+from repro.core.fanout import fanout, fanin_sum, fanin_mean, fanout_local

@@ -1,0 +1,60 @@
+"""ROO expansion adapter (paper Appendix C) — device-side.
+
+Expands a request-level ``ROOBatch`` into impression-level tensors (every RO
+feature duplicated to ``B_NRO`` rows) so legacy impression-level models run
+unchanged on ROO storage. This trades compute for compatibility exactly as
+the paper describes (the storage/IO win is kept; the training dedup is not).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fanout import fanout
+from repro.core.roo_batch import ROOBatch
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ImpressionBatch:
+    """Impression-level view: every tensor has leading dim B_NRO."""
+    ro_dense: jnp.ndarray          # (B_NRO, n_ro_dense)
+    history_ids: jnp.ndarray       # (B_NRO, hist_len)
+    history_actions: jnp.ndarray   # (B_NRO, hist_len)
+    history_lengths: jnp.ndarray   # (B_NRO,)
+    nro_dense: jnp.ndarray         # (B_NRO, n_item_dense)
+    item_ids: jnp.ndarray          # (B_NRO,)
+    labels: jnp.ndarray            # (B_NRO, n_tasks)
+    valid: jnp.ndarray             # (B_NRO,) bool
+
+    _FIELDS = ("ro_dense", "history_ids", "history_actions", "history_lengths",
+               "nro_dense", "item_ids", "labels", "valid")
+
+    def tree_flatten(self):
+        return tuple(getattr(self, f) for f in self._FIELDS), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def batch_size(self) -> int:
+        return self.nro_dense.shape[0]
+
+
+def expand(batch: ROOBatch) -> ImpressionBatch:
+    """ROO -> impression-level (all RO features fanned out to B_NRO)."""
+    seg = batch.segment_ids
+    return ImpressionBatch(
+        ro_dense=fanout(batch.ro_dense, seg),
+        history_ids=fanout(batch.history_ids, seg),
+        history_actions=fanout(batch.history_actions, seg),
+        history_lengths=fanout(batch.history_lengths, seg),
+        nro_dense=batch.nro_dense,
+        item_ids=batch.item_ids,
+        labels=batch.labels,
+        valid=batch.impression_mask(),
+    )

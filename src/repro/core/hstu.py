@@ -1,0 +1,135 @@
+"""HSTU — Hierarchical Sequential Transduction Unit (Zhai et al. 2024,
+arXiv:2402.17152), the ROO-friendly sequence encoder the paper scales up.
+
+One HSTU layer (pointwise attention variant, as deployed):
+
+    [U, V, Q, K] = SiLU( X @ W_uvqk )                        (f1)
+    A            = SiLU( Q K^T / sqrt(d) + rab ) * mask / n  (pointwise attn)
+    Y            = ( LayerNorm( A @ V ) * U ) @ W_o          (f2)
+    out          = X + Y                                     (residual)
+
+No softmax: SiLU-activated scores scaled by 1/n, which is what makes the
+kernel a single fused pass (no running-max bookkeeping) — see
+``repro/kernels/hstu_attention.py`` for the Pallas TPU version; this module
+is the pure-jnp implementation used as its oracle and for CPU execution.
+
+``rab`` is a learned relative-position bias over clipped position deltas
+(optionally time-bucketed — the contextual `c` features of §3.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class HSTUConfig:
+    d_model: int
+    n_heads: int
+    d_qk: int
+    d_v: int
+    n_layers: int
+    max_rel_pos: int = 128         # rab table covers deltas in [-max, max]
+    use_rab: bool = True
+    eps: float = 1e-6
+
+
+def _ln(x, eps=1e-6):
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+def hstu_layer_init(rng: jax.Array, cfg: HSTUConfig, dtype=jnp.float32) -> Dict:
+    h, dqk, dv, d = cfg.n_heads, cfg.d_qk, cfg.d_v, cfg.d_model
+    k1, k2, k3 = jax.random.split(rng, 3)
+    fan = (2.0 / (d + h * (2 * dqk + 2 * dv))) ** 0.5
+    params = {
+        "w_uvqk": (jax.random.normal(k1, (d, h * (2 * dv + 2 * dqk))) * fan).astype(dtype),
+        "b_uvqk": jnp.zeros((h * (2 * dv + 2 * dqk),), dtype),
+        "w_o": (jax.random.normal(k2, (h * dv, d)) * (2.0 / (h * dv + d)) ** 0.5).astype(dtype),
+        "ln_scale": jnp.ones((h * dv,), dtype),
+        "ln_bias": jnp.zeros((h * dv,), dtype),
+    }
+    if cfg.use_rab:
+        params["rab"] = (jax.random.normal(k3, (cfg.n_heads, 2 * cfg.max_rel_pos + 1))
+                         * 0.02).astype(dtype)
+    return params
+
+
+def hstu_init(rng: jax.Array, cfg: HSTUConfig, dtype=jnp.float32) -> Dict:
+    keys = jax.random.split(rng, cfg.n_layers)
+    return {"layers": [hstu_layer_init(k, cfg, dtype) for k in keys],
+            "in_ln_scale": jnp.ones((cfg.d_model,), dtype),
+            "in_ln_bias": jnp.zeros((cfg.d_model,), dtype)}
+
+
+def _rel_bias(rab: jnp.ndarray, s: int, max_rel: int) -> jnp.ndarray:
+    """(H, S, S) bias from the (H, 2*max+1) delta table."""
+    pos = jnp.arange(s)
+    delta = jnp.clip(pos[:, None] - pos[None, :], -max_rel, max_rel) + max_rel
+    return rab[:, delta]          # (H, S, S)
+
+
+def hstu_layer_apply(params: Dict, cfg: HSTUConfig, x: jnp.ndarray,
+                     mask: jnp.ndarray,
+                     attn_fn=None) -> jnp.ndarray:
+    """x: (B, S, d); mask: (B, S, S) bool or (S, S). Returns (B, S, d).
+
+    ``attn_fn``: optional override computing the masked pointwise attention
+    (used to swap in the Pallas kernel); signature (q, k, v, bias, mask) with
+    q,k: (B,H,S,dqk), v: (B,H,S,dv) -> (B,H,S,dv).
+    """
+    b, s, d = x.shape
+    h, dqk, dv = cfg.n_heads, cfg.d_qk, cfg.d_v
+    xn = _ln(x, cfg.eps)
+    uvqk = jax.nn.silu(xn @ params["w_uvqk"] + params["b_uvqk"])
+    u, v, q, k = jnp.split(uvqk, [h * dv, 2 * h * dv, 2 * h * dv + h * dqk], axis=-1)
+    q = q.reshape(b, s, h, dqk).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, h, dqk).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, h, dv).transpose(0, 2, 1, 3)
+
+    if mask.ndim == 2:
+        mask = mask[None]
+    bias = (_rel_bias(params["rab"], s, cfg.max_rel_pos)[None]
+            if cfg.use_rab else None)
+
+    if attn_fn is not None:
+        av = attn_fn(q, k, v, bias, mask)
+    else:
+        scores = jnp.einsum("bhid,bhjd->bhij", q, k) / jnp.sqrt(
+            jnp.asarray(dqk, x.dtype))
+        if bias is not None:
+            scores = scores + bias
+        a = jax.nn.silu(scores) / jnp.asarray(s, x.dtype)
+        a = a * mask[:, None].astype(a.dtype)
+        av = jnp.einsum("bhij,bhjd->bhid", a, v)
+
+    av = av.transpose(0, 2, 1, 3).reshape(b, s, h * dv)
+    y = _ln(av, cfg.eps) * params["ln_scale"] + params["ln_bias"]
+    y = (y * u) @ params["w_o"]
+    return x + y
+
+
+def hstu_apply(params: Dict, cfg: HSTUConfig, x: jnp.ndarray,
+               mask: jnp.ndarray, attn_fn=None) -> jnp.ndarray:
+    x = _ln(x, cfg.eps) * params["in_ln_scale"] + params["in_ln_bias"]
+    for layer in params["layers"]:
+        x = hstu_layer_apply(layer, cfg, x, mask, attn_fn=attn_fn)
+    return x
+
+
+def hstu_flops(cfg: HSTUConfig, batch: int, seq: int) -> int:
+    """Forward FLOPs (2x MACs) of the encoder — used for the §3.3
+    amortization benchmark and Table 6 accounting."""
+    h, dqk, dv, d = cfg.n_heads, cfg.d_qk, cfg.d_v, cfg.d_model
+    per_layer = (
+        2 * seq * d * h * (2 * dv + 2 * dqk)        # f1 projections
+        + 2 * h * seq * seq * dqk                   # Q K^T
+        + 2 * h * seq * seq * dv                    # A V
+        + 2 * seq * h * dv * d                      # f2 output proj
+    )
+    return batch * cfg.n_layers * per_layer

@@ -1,0 +1,80 @@
+"""Linear Compressed Embedding (LCE) + UserArch (paper §3.2, Eq. 1–2).
+
+LCE compresses a bag of feature embeddings along the *feature-count* axis
+first (n_in -> n_out, Eq. 1), then projects the embedding axis
+(d_in -> d_out, Eq. 2). Under ROO, UserArch runs at B_RO, so its cost is
+amortized across the request's impressions.
+
+Shapes follow the paper exactly: X in R^{B, d_in, n_in}.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LCEConfig:
+    n_in: int          # input number of feature embeddings
+    d_in: int          # input embedding dim
+    n_out: int         # compressed number of embeddings
+    d_out: int         # output embedding dim
+
+
+def lce_init(rng: jax.Array, cfg: LCEConfig, dtype=jnp.float32) -> Dict:
+    k1, k2 = jax.random.split(rng)
+    s1 = (2.0 / (cfg.n_in + cfg.n_out)) ** 0.5
+    s2 = (2.0 / (cfg.d_in + cfg.d_out)) ** 0.5
+    return {
+        "W": (jax.random.normal(k1, (cfg.n_in, cfg.n_out)) * s1).astype(dtype),
+        "b": jnp.zeros((1, cfg.n_out), dtype),
+        "W2": (jax.random.normal(k2, (cfg.d_in, cfg.d_out)) * s2).astype(dtype),
+        "b2": jnp.zeros((1, cfg.d_out), dtype),
+    }
+
+
+def lce_apply(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 1–2. x: (B, d_in, n_in) -> (B, n_out, d_out)."""
+    # Eq. 1: g(X) reshapes to (B*d_in, n_in); W: (n_in, n_out); + b (1, n_out)
+    h = jnp.einsum("bdn,nm->bdm", x, params["W"]) + params["b"][None]
+    # Eq. 2: g'(f(X)) permutes/reshapes to (B*n_out, d_in); W2: (d_in, d_out)
+    h = jnp.transpose(h, (0, 2, 1))                       # (B, n_out, d_in)
+    out = jnp.einsum("bmd,de->bme", h, params["W2"]) + params["b2"][None]
+    return out
+
+
+def lce_flops(cfg: LCEConfig, batch: int) -> int:
+    """Forward multiply-add FLOPs (x2 for MAC)."""
+    return 2 * batch * (cfg.d_in * cfg.n_in * cfg.n_out
+                        + cfg.n_out * cfg.d_in * cfg.d_out)
+
+
+@dataclasses.dataclass(frozen=True)
+class UserArchConfig:
+    """UserArch = LCE over user feature embeddings (+ optional history
+    summary concatenated as extra input embeddings)."""
+    lce: LCEConfig
+    use_history_summary: bool = True   # append pooled history embedding
+
+
+def userarch_init(rng: jax.Array, cfg: UserArchConfig, dtype=jnp.float32) -> Dict:
+    return {"lce": lce_init(rng, cfg.lce, dtype)}
+
+
+def userarch_apply(params: Dict, cfg: UserArchConfig,
+                   user_feature_embs: jnp.ndarray,
+                   history_summary: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """user_feature_embs: (B_RO, n_feat, d); history_summary: (B_RO, k, d).
+
+    Returns (B_RO, n_out, d_out) compressed user embeddings — the post-ROO
+    architecture's user-side input.
+    """
+    x = user_feature_embs
+    if cfg.use_history_summary and history_summary is not None:
+        x = jnp.concatenate([x, history_summary], axis=1)
+    # LCE expects (B, d, n)
+    x = jnp.transpose(x, (0, 2, 1))
+    return lce_apply(params["lce"], x)

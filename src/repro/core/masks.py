@@ -1,0 +1,63 @@
+"""ROO attention masks (paper §3.3).
+
+The ROO sequence for one request is ``[h_0 .. h_{n-1} | t_0 .. t_{m-1}]``:
+n history items followed by the request's m target (candidate) items.
+The mask encodes:
+
+  * history→history : causal (h_i attends h_j iff j <= i);
+  * target→history  : full (every target sees the whole valid history);
+  * target→target   : DIAGONAL ONLY — target t_k attends to itself but NOT
+    to the other targets, so scoring m candidates in one pass is exactly
+    equivalent to m independent (history + 1 target) passes. This is the
+    equivalence property that makes the m·(n²d+nd²) -> (n+m)²d+(n+m)d²
+    amortization legitimate, and it is property-tested.
+
+All masks also honor per-request valid history length and valid target count.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def roo_sequence_mask(n_hist: int, m_targets: int) -> jnp.ndarray:
+    """(n+m, n+m) bool allowed-attention mask (True = may attend)."""
+    s = n_hist + m_targets
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    is_hist_q = i < n_hist
+    is_hist_k = j < n_hist
+    causal = j <= i
+    hist_block = is_hist_q & is_hist_k & causal
+    target_hist = (~is_hist_q) & is_hist_k
+    target_self = (~is_hist_q) & (~is_hist_k) & (i == j)
+    return hist_block | target_hist | target_self
+
+
+def roo_batch_mask(hist_lengths: jnp.ndarray, target_counts: jnp.ndarray,
+                   n_hist: int, m_targets: int) -> jnp.ndarray:
+    """(B, n+m, n+m) mask with per-request valid lengths applied.
+
+    hist_lengths: (B,) valid history per request.
+    target_counts: (B,) valid targets per request.
+    """
+    base = roo_sequence_mask(n_hist, m_targets)[None]        # (1, s, s)
+    s = n_hist + m_targets
+    pos = jnp.arange(s)
+    hist_valid = jnp.where(pos < n_hist,
+                           pos[None, :] < hist_lengths[:, None],
+                           (pos[None, :] - n_hist) < target_counts[:, None])
+    return base & hist_valid[:, None, :] & hist_valid[:, :, None]
+
+
+def causal_mask(n: int) -> jnp.ndarray:
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    return j <= i
+
+
+def history_mask(hist_lengths: jnp.ndarray, n_hist: int) -> jnp.ndarray:
+    """(B, n, n) causal mask over variable-length histories."""
+    base = causal_mask(n_hist)[None]
+    pos = jnp.arange(n_hist)
+    valid = pos[None, :] < hist_lengths[:, None]
+    return base & valid[:, None, :] & valid[:, :, None]

@@ -1,0 +1,94 @@
+"""ROOBatch — the request-level training batch (the paper's Table 2 schema,
+materialized for SPMD training).
+
+A mini-batch holds ``B_RO`` request-level samples and ``B_NRO`` impression
+slots (``B_NRO = capacity >= sum(num_impressions)``; the tail is padding).
+RO tensors have leading dim ``B_RO``; NRO tensors have leading dim ``B_NRO``.
+``segment_ids`` maps every impression slot to its request row (== ``B_RO``
+for padding), which is all the structure fanout/segment reductions need.
+
+The batcher (repro/data/batcher.py) guarantees *request locality* under
+sharding: when the leading dims are sharded over the (pod, data) axes, a
+request and all of its impressions land on the same shard, so fanout is a
+shard-local gather.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.jagged import KeyedJagged
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ROOBatch:
+    # ---- RO (request-only / user side): leading dim B_RO --------------------
+    ro_dense: jnp.ndarray                 # (B_RO, n_ro_dense) float
+    ro_sparse: Optional[KeyedJagged]      # user id-list features
+    history_ids: jnp.ndarray              # (B_RO, hist_len) int32, 0-padded
+    history_actions: jnp.ndarray          # (B_RO, hist_len) int32
+    history_lengths: jnp.ndarray          # (B_RO,) int32
+    # ---- NRO (impression / item side): leading dim B_NRO --------------------
+    nro_dense: jnp.ndarray                # (B_NRO, n_item_dense) float
+    nro_sparse: Optional[KeyedJagged]     # item id-list features
+    item_ids: jnp.ndarray                 # (B_NRO,) int32
+    labels: jnp.ndarray                   # (B_NRO, n_tasks) float
+    # ---- structure -----------------------------------------------------------
+    num_impressions: jnp.ndarray          # (B_RO,) int32
+    segment_ids: jnp.ndarray              # (B_NRO,) int32; == B_RO for padding
+
+    _FIELDS = ("ro_dense", "ro_sparse", "history_ids", "history_actions",
+               "history_lengths", "nro_dense", "nro_sparse", "item_ids",
+               "labels", "num_impressions", "segment_ids")
+
+    def tree_flatten(self):
+        return tuple(getattr(self, f) for f in self._FIELDS), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # ---- sizes ---------------------------------------------------------------
+    @property
+    def b_ro(self) -> int:
+        return self.ro_dense.shape[0]
+
+    @property
+    def b_nro(self) -> int:
+        return self.nro_dense.shape[0]
+
+    # ---- masks ---------------------------------------------------------------
+    def impression_mask(self) -> jnp.ndarray:
+        """(B_NRO,) bool — True for real impressions, False for padding."""
+        return self.segment_ids < self.b_ro
+
+    def request_mask(self) -> jnp.ndarray:
+        """(B_RO,) bool — True for real requests (>=1 impression)."""
+        return self.num_impressions > 0
+
+    def num_valid_impressions(self) -> jnp.ndarray:
+        return jnp.sum(self.num_impressions)
+
+    def validate_static(self) -> None:
+        """Host-side shape/consistency checks (not traced)."""
+        assert self.segment_ids.shape[0] == self.nro_dense.shape[0]
+        assert self.num_impressions.shape[0] == self.ro_dense.shape[0]
+        assert self.history_ids.shape[0] == self.ro_dense.shape[0]
+        assert self.labels.shape[0] == self.nro_dense.shape[0]
+
+
+def segment_ids_from_counts(num_impressions: jnp.ndarray,
+                            capacity: int) -> jnp.ndarray:
+    """Derive (capacity,) segment ids from per-request impression counts.
+
+    Padding slots (at or past sum(num_impressions)) get ``B_RO``.
+    """
+    b_ro = num_impressions.shape[0]
+    ends = jnp.cumsum(num_impressions)
+    idx = jnp.arange(capacity, dtype=jnp.int32)
+    seg = jnp.searchsorted(ends, idx, side="right").astype(jnp.int32)
+    return jnp.where(idx < ends[-1], seg, b_ro)

@@ -1,0 +1,192 @@
+"""ROO mini-batch packing (host side, numpy).
+
+Packs a list of ROOSamples into fixed-shape ``ROOBatch`` pytrees:
+  * ``B_RO`` request rows, ``B_NRO`` impression slots (static capacities);
+  * requests are packed shard-by-shard so that, when the leading dims are
+    sharded over N data shards, every request's impressions live on the same
+    shard as the request row (the *request-locality* invariant fanout_local
+    depends on);
+  * ``segment_ids`` can be emitted global (default) or shard-local.
+
+Also provides the impression-level packing used by baseline (non-ROO)
+training and by the ROO-expansion backward-compat adapter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.joiner import ImpressionSample, ROOSample
+from repro.core.roo_batch import ROOBatch
+from repro.data.jagged import JaggedTensor, KeyedJagged
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class BatcherConfig:
+    b_ro: int = 64                 # requests per batch
+    b_nro: int = 512               # impression slots per batch
+    hist_len: int = 64
+    ro_idlist_capacity: int = 1024
+    item_idlist_capacity: int = 4096
+    n_shards: int = 1              # data shards; leading dims divisible by it
+    local_segment_ids: bool = False
+    label_keys: Sequence[str] = ("click", "view_sec")
+
+
+def _pad2d(rows: List[np.ndarray], n: int, width: int, dtype=np.float32):
+    out = np.zeros((n, width), dtype)
+    for i, r in enumerate(rows[:n]):
+        w = min(width, r.shape[-1])
+        out[i, :w] = np.asarray(r).ravel()[:w]
+    return out
+
+
+def _pad_seq(rows: List[List[int]], n: int, width: int):
+    out = np.zeros((n, width), np.int32)
+    lens = np.zeros((n,), np.int32)
+    for i, r in enumerate(rows[:n]):
+        k = min(width, len(r))
+        if k:
+            out[i, :k] = np.asarray(r[-k:], np.int32)   # keep most recent
+        lens[i] = k
+    return out, lens
+
+
+class ROOBatcher:
+    """Greedy shard-aware packer: fills each shard's request/impression quota."""
+
+    def __init__(self, cfg: BatcherConfig):
+        assert cfg.b_ro % cfg.n_shards == 0 and cfg.b_nro % cfg.n_shards == 0
+        self.cfg = cfg
+
+    def batches(self, samples: Sequence[ROOSample]) -> Iterator[ROOBatch]:
+        cfg = self.cfg
+        per_shard_ro = cfg.b_ro // cfg.n_shards
+        per_shard_nro = cfg.b_nro // cfg.n_shards
+        queue = list(samples)
+        while queue:
+            shard_reqs: List[List[ROOSample]] = [[] for _ in range(cfg.n_shards)]
+            shard_imps = [0] * cfg.n_shards
+            progress = False
+            for shard in range(cfg.n_shards):
+                while queue and len(shard_reqs[shard]) < per_shard_ro:
+                    s = queue[0]
+                    n_imp = min(s.num_impressions, per_shard_nro)
+                    if shard_imps[shard] + n_imp > per_shard_nro:
+                        break
+                    queue.pop(0)
+                    shard_reqs[shard].append(s)
+                    shard_imps[shard] += n_imp
+                    progress = True
+            if not progress:      # a single over-size request: truncate it
+                s = queue.pop(0)
+                s = dataclasses.replace(
+                    s, item_ids=s.item_ids[:per_shard_nro],
+                    item_dense=s.item_dense[:per_shard_nro],
+                    item_idlist=s.item_idlist[:per_shard_nro],
+                    labels=s.labels[:per_shard_nro])
+                shard_reqs[0].append(s)
+            yield self._pack(shard_reqs)
+
+    def _pack(self, shard_reqs: List[List[ROOSample]]) -> ROOBatch:
+        cfg = self.cfg
+        per_shard_ro = cfg.b_ro // cfg.n_shards
+        per_shard_nro = cfg.b_nro // cfg.n_shards
+
+        ro_dense_rows, ro_idlists, hists, acts = [], [], [], []
+        num_imp = np.zeros((cfg.b_ro,), np.int32)
+        seg = np.full((cfg.b_nro,), cfg.b_ro, np.int32)
+        nro_dense_rows: List[np.ndarray] = []
+        nro_idlists: List[List[int]] = []
+        item_ids = np.zeros((cfg.b_nro,), np.int32)
+        labels = np.zeros((cfg.b_nro, len(cfg.label_keys)), np.float32)
+
+        nro_fill = [0] * cfg.n_shards
+        for shard, reqs in enumerate(shard_reqs):
+            for j, s in enumerate(reqs):
+                row = shard * per_shard_ro + j
+                ro_dense_rows.append((row, s.ro_dense))
+                ro_idlists.append((row, s.ro_idlist))
+                hists.append((row, s.history_ids))
+                acts.append((row, s.history_actions))
+                n = min(s.num_impressions, per_shard_nro - nro_fill[shard])
+                num_imp[row] = n
+                for k in range(n):
+                    slot = shard * per_shard_nro + nro_fill[shard]
+                    nro_fill[shard] += 1
+                    seg[slot] = (j if cfg.local_segment_ids else row)
+                    item_ids[slot] = s.item_ids[k]
+                    nro_dense_rows.append((slot, s.item_dense[k]))
+                    nro_idlists.append((slot, s.item_idlist[k]))
+                    labels[slot] = [s.labels[k].get(key, 0.0)
+                                    for key in cfg.label_keys]
+        if cfg.local_segment_ids:
+            # padding marker becomes local b_ro
+            pad = seg == cfg.b_ro
+            seg = np.where(pad, per_shard_ro, seg)
+
+        # densify RO side
+        n_ro_dense = ro_dense_rows[0][1].shape[-1] if ro_dense_rows else 1
+        ro_dense = np.zeros((cfg.b_ro, n_ro_dense), np.float32)
+        for row, v in ro_dense_rows:
+            ro_dense[row] = np.asarray(v, np.float32)[:n_ro_dense]
+        hist_rows = [[] for _ in range(cfg.b_ro)]
+        act_rows = [[] for _ in range(cfg.b_ro)]
+        for row, h in hists:
+            hist_rows[row] = list(h)
+        for row, a in acts:
+            act_rows[row] = list(a)
+        history_ids, hist_lens = _pad_seq(hist_rows, cfg.b_ro, cfg.hist_len)
+        history_actions, _ = _pad_seq(act_rows, cfg.b_ro, cfg.hist_len)
+
+        ro_idlist_rows = [[] for _ in range(cfg.b_ro)]
+        for row, ids in ro_idlists:
+            ro_idlist_rows[row] = list(ids)
+        ro_sparse = KeyedJagged({"user_ids": JaggedTensor.from_lists(
+            ro_idlist_rows, cfg.ro_idlist_capacity)})
+
+        n_item_dense = nro_dense_rows[0][1].shape[-1] if nro_dense_rows else 1
+        nro_dense = np.zeros((cfg.b_nro, n_item_dense), np.float32)
+        for slot, v in nro_dense_rows:
+            nro_dense[slot] = np.asarray(v, np.float32)[:n_item_dense]
+        nro_idlist_rows = [[] for _ in range(cfg.b_nro)]
+        for slot, ids in nro_idlists:
+            nro_idlist_rows[slot] = list(ids)
+        nro_sparse = KeyedJagged({"item_cats": JaggedTensor.from_lists(
+            nro_idlist_rows, cfg.item_idlist_capacity)})
+
+        return ROOBatch(
+            ro_dense=jnp.asarray(ro_dense),
+            ro_sparse=ro_sparse,
+            history_ids=jnp.asarray(history_ids),
+            history_actions=jnp.asarray(history_actions),
+            history_lengths=jnp.asarray(hist_lens),
+            nro_dense=jnp.asarray(nro_dense),
+            nro_sparse=nro_sparse,
+            item_ids=jnp.asarray(item_ids),
+            labels=jnp.asarray(labels),
+            num_impressions=jnp.asarray(num_imp),
+            segment_ids=jnp.asarray(seg),
+        )
+
+
+def impression_batches(samples: Sequence[ImpressionSample], batch_size: int,
+                       cfg: BatcherConfig) -> Iterator[ROOBatch]:
+    """Pack impression samples as degenerate ROO batches (1 impression per
+    'request'): this is exactly impression-level training, reusing the same
+    model code. B_RO == B_NRO == batch_size."""
+    from repro.core.joiner import ROOSample as _RS
+    roo_like = [
+        _RS(request_id=s.request_id, user_id=s.user_id, ro_dense=s.ro_dense,
+            ro_idlist=s.ro_idlist, history_ids=s.history_ids,
+            history_actions=s.history_actions, item_ids=[s.item_id],
+            item_dense=[s.item_dense], item_idlist=[s.item_idlist],
+            labels=[s.labels])
+        for s in samples
+    ]
+    sub = dataclasses.replace(cfg, b_ro=batch_size, b_nro=batch_size)
+    yield from ROOBatcher(sub).batches(roo_like)

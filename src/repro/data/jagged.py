@@ -1,0 +1,157 @@
+"""Jagged (ragged) tensor substrate — the JAX analogue of TorchRec's
+KeyedJaggedTensor.
+
+XLA requires static shapes, so a JaggedTensor carries a *fixed-capacity*
+`values` buffer plus `lengths`/`offsets` bookkeeping. Semantics (what the
+paper stores in its request-level schema, Table 2) live in the indices; the
+padding never leaks into model math because every consumer masks by length.
+
+Two layouts are used throughout the framework:
+
+  * ``JaggedTensor``    — one ragged axis: values ``(capacity, *feat)`` +
+    ``lengths (batch,)``. Used for ID-list features, user histories, and the
+    impressions-per-request structure of a ROO batch.
+  * ``KeyedJagged``     — a dict of named JaggedTensors sharing a batch size
+    (the KJT analogue), used by the embedding collection.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _cumsum_exclusive(lengths: jnp.ndarray) -> jnp.ndarray:
+    return jnp.concatenate([jnp.zeros((1,), lengths.dtype), jnp.cumsum(lengths)[:-1]])
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class JaggedTensor:
+    """values[(capacity, *feat)] + lengths[(batch,)]; rows are contiguous.
+
+    ``offsets[i] = sum(lengths[:i])`` gives the start of row i in `values`.
+    Entries past ``sum(lengths)`` are padding and must be masked by consumers.
+    """
+
+    values: jnp.ndarray      # (capacity, ...) packed row-major by batch entry
+    lengths: jnp.ndarray     # (batch,) int32
+
+    def tree_flatten(self):
+        return (self.values, self.lengths), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def batch_size(self) -> int:
+        return self.lengths.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def offsets(self) -> jnp.ndarray:
+        return _cumsum_exclusive(self.lengths)
+
+    def total(self) -> jnp.ndarray:
+        return jnp.sum(self.lengths)
+
+    # ---- index bookkeeping -------------------------------------------------
+    def segment_ids(self) -> jnp.ndarray:
+        """(capacity,) int32 mapping each value slot -> batch row.
+
+        Padding slots get ``batch_size`` (one past the end) so that
+        ``segment_sum(..., num_segments=batch_size)`` drops them and
+        ``take(x, seg_ids, fill_value)``-style gathers can detect them.
+        """
+        # slot i belongs to row r iff offsets[r] <= i < offsets[r]+lengths[r]
+        idx = jnp.arange(self.capacity, dtype=jnp.int32)
+        # searchsorted over offsets+lengths boundaries
+        ends = jnp.cumsum(self.lengths)
+        seg = jnp.searchsorted(ends, idx, side="right").astype(jnp.int32)
+        valid = idx < ends[-1] if self.batch_size > 0 else jnp.zeros_like(idx, bool)
+        return jnp.where(valid, seg, self.batch_size)
+
+    def valid_mask(self) -> jnp.ndarray:
+        """(capacity,) bool — True for real entries, False for padding."""
+        idx = jnp.arange(self.capacity, dtype=jnp.int32)
+        return idx < self.total()
+
+    # ---- densification -----------------------------------------------------
+    def to_padded(self, max_len: int, fill_value=0) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Return (batch, max_len, *feat) dense tensor + (batch, max_len) mask.
+
+        Rows longer than ``max_len`` are truncated.
+        """
+        b = self.batch_size
+        offs = self.offsets
+        pos = jnp.arange(max_len, dtype=jnp.int32)
+        gather_idx = offs[:, None] + pos[None, :]                    # (b, max_len)
+        mask = pos[None, :] < jnp.minimum(self.lengths, max_len)[:, None]
+        gather_idx = jnp.clip(gather_idx, 0, self.capacity - 1)
+        dense = jnp.take(self.values, gather_idx.reshape(-1), axis=0)
+        dense = dense.reshape((b, max_len) + self.values.shape[1:])
+        fill = jnp.asarray(fill_value, dense.dtype)
+        bmask = mask.reshape(mask.shape + (1,) * (dense.ndim - 2))
+        return jnp.where(bmask, dense, fill), mask
+
+    @staticmethod
+    def from_dense(dense: jnp.ndarray, lengths: jnp.ndarray,
+                   capacity: int | None = None) -> "JaggedTensor":
+        """Pack a padded (batch, max_len, *feat) tensor into jagged layout."""
+        b, ml = dense.shape[0], dense.shape[1]
+        capacity = capacity if capacity is not None else b * ml
+        offs = _cumsum_exclusive(lengths)
+        pos = jnp.arange(ml, dtype=jnp.int32)
+        valid = pos[None, :] < lengths[:, None]
+        # destination slot for each (row, pos)
+        dest = offs[:, None] + pos[None, :]
+        dest = jnp.where(valid, dest, capacity)  # park padding out of range
+        flat_src = dense.reshape((b * ml,) + dense.shape[2:])
+        out = jnp.zeros((capacity + 1,) + dense.shape[2:], dense.dtype)
+        out = out.at[dest.reshape(-1)].set(flat_src, mode="drop")
+        return JaggedTensor(out[:capacity], lengths.astype(jnp.int32))
+
+    # ---- numpy-side construction (host data path) ---------------------------
+    @staticmethod
+    def from_lists(rows: Sequence[Sequence], capacity: int,
+                   dtype=np.int32) -> "JaggedTensor":
+        lengths = np.asarray([len(r) for r in rows], np.int32)
+        flat = np.zeros((capacity,), dtype)
+        cat = np.concatenate([np.asarray(r, dtype) for r in rows]) if rows else np.zeros((0,), dtype)
+        n = min(capacity, cat.shape[0])
+        flat[:n] = cat[:n]
+        return JaggedTensor(jnp.asarray(flat), jnp.asarray(lengths))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class KeyedJagged:
+    """Named bundle of JaggedTensors with a shared batch size (KJT analogue)."""
+
+    features: Dict[str, JaggedTensor]
+
+    def tree_flatten(self):
+        keys = sorted(self.features)
+        return tuple(self.features[k] for k in keys), tuple(keys)
+
+    @classmethod
+    def tree_unflatten(cls, keys, children):
+        return cls(dict(zip(keys, children)))
+
+    def __getitem__(self, key: str) -> JaggedTensor:
+        return self.features[key]
+
+    def keys(self):
+        return sorted(self.features)
+
+    @property
+    def batch_size(self) -> int:
+        any_key = next(iter(self.features))
+        return self.features[any_key].batch_size

@@ -1,0 +1,69 @@
+"""EmbeddingBag — JAX has no native one; this IS part of the system.
+
+A bag lookup pools the embeddings of a variable-length id list per batch row:
+``take`` (ragged gather over the vocab) + ``segment_sum/max`` (reduce by
+row). Implemented over the framework's JaggedTensor layout so padding never
+contributes.
+
+The Pallas TPU kernel version lives in repro/kernels/embedding_bag.py with
+this module as its oracle.
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.jagged import JaggedTensor
+
+Pooling = Literal["sum", "mean", "max"]
+
+
+def bag_lookup(table: jnp.ndarray, ids: JaggedTensor,
+               pooling: Pooling = "sum") -> jnp.ndarray:
+    """table: (V, D); ids: JaggedTensor with int values.
+
+    Returns (batch, D) pooled embeddings; empty bags give zeros.
+    """
+    b = ids.batch_size
+    seg = ids.segment_ids()                       # (capacity,), b == padding
+    valid = (seg < b)
+    safe_ids = jnp.clip(ids.values, 0, table.shape[0] - 1)
+    emb = jnp.take(table, safe_ids, axis=0)       # (capacity, D)
+    emb = emb * valid[:, None].astype(emb.dtype)
+    if pooling == "max":
+        neg = jnp.full_like(emb, jnp.finfo(emb.dtype).min)
+        emb = jnp.where(valid[:, None], emb, neg)
+        out = jax.ops.segment_max(emb, seg, num_segments=b + 1)[:b]
+        has_any = (ids.lengths > 0)[:, None]
+        return jnp.where(has_any, out, 0.0)
+    out = jax.ops.segment_sum(emb, seg, num_segments=b + 1)[:b]
+    if pooling == "mean":
+        denom = jnp.maximum(ids.lengths, 1).astype(out.dtype)[:, None]
+        out = out / denom
+    return out
+
+
+def bag_lookup_dense(table: jnp.ndarray, ids: jnp.ndarray,
+                     lengths: jnp.ndarray,
+                     pooling: Pooling = "sum") -> jnp.ndarray:
+    """Padded-layout variant. ids: (B, L) int; lengths: (B,).
+
+    Used for fixed-width multi-hot features (e.g. user history pooling)
+    where jagged packing is unnecessary.
+    """
+    b, l = ids.shape
+    valid = jnp.arange(l)[None, :] < lengths[:, None]
+    safe = jnp.clip(ids, 0, table.shape[0] - 1)
+    emb = jnp.take(table, safe.reshape(-1), axis=0).reshape(b, l, -1)
+    emb = emb * valid[..., None].astype(emb.dtype)
+    if pooling == "max":
+        neg = jnp.full_like(emb, jnp.finfo(emb.dtype).min)
+        emb = jnp.where(valid[..., None], emb, neg)
+        out = jnp.max(emb, axis=1)
+        return jnp.where((lengths > 0)[:, None], out, 0.0)
+    out = jnp.sum(emb, axis=1)
+    if pooling == "mean":
+        out = out / jnp.maximum(lengths, 1).astype(out.dtype)[:, None]
+    return out

@@ -1,0 +1,145 @@
+"""Model-parallel (row-sharded) embedding tables with explicit collectives.
+
+TorchRec's sharded embedding + all-to-all pattern, translated to TPU/JAX:
+table rows are sharded over the ``model`` mesh axis; a lookup computes a
+local partial bag (ids outside the shard masked to zero) and ``psum``s over
+``model``. Ids arrive batch-sharded over the (pod,) data axes and replicated
+over ``model`` — the psum of (B_local, D) per table is the collective whose
+bytes ROO reduces from B_NRO·D to B_RO·D for user-side tables (§2.2, Fig 3).
+
+Variable-batch sharding: RO lookups (batch B_RO) and NRO lookups (batch
+B_NRO) share the same table parameters — just two calls with different
+leading dims, which is all the TorchRec "variable-length batch sharding"
+machinery amounts to under SPMD.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.data.jagged import JaggedTensor
+from repro.embeddings.bag import bag_lookup, bag_lookup_dense
+
+
+@dataclasses.dataclass(frozen=True)
+class TableConfig:
+    name: str
+    vocab: int
+    dim: int
+    pooling: str = "sum"
+    side: str = "nro"          # "ro" (user/request) or "nro" (item) — decides
+                               # which batch size the lookup runs at under ROO
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingCollectionConfig:
+    tables: Tuple[TableConfig, ...]
+
+    def table(self, name: str) -> TableConfig:
+        for t in self.tables:
+            if t.name == name:
+                return t
+        raise KeyError(name)
+
+
+def init_tables(rng: jax.Array, cfg: EmbeddingCollectionConfig,
+                dtype=jnp.float32, scale: float = 0.01) -> Dict[str, jnp.ndarray]:
+    keys = jax.random.split(rng, len(cfg.tables))
+    return {t.name: (jax.random.normal(k, (t.vocab, t.dim)) * scale).astype(dtype)
+            for t, k in zip(cfg.tables, keys)}
+
+
+def table_partition_specs(cfg: EmbeddingCollectionConfig,
+                          model_axis: str = "model") -> Dict[str, P]:
+    """Row-shard every table over the model axis."""
+    return {t.name: P(model_axis, None) for t in cfg.tables}
+
+
+# ---------------------------------------------------------------------------
+# Replicated-path lookups (single device / CPU tests): plain bags.
+# ---------------------------------------------------------------------------
+
+def lookup(table: jnp.ndarray, ids: JaggedTensor, pooling: str = "sum"):
+    return bag_lookup(table, ids, pooling)
+
+
+def lookup_dense(table: jnp.ndarray, ids: jnp.ndarray, lengths: jnp.ndarray,
+                 pooling: str = "sum"):
+    return bag_lookup_dense(table, ids, lengths, pooling)
+
+
+# ---------------------------------------------------------------------------
+# Explicit model-parallel lookup under shard_map.
+# ---------------------------------------------------------------------------
+
+def _local_partial_bag(tbl_shard: jnp.ndarray, ids: jnp.ndarray,
+                       lengths: jnp.ndarray, vocab: int, n_shards: int,
+                       shard_idx: jnp.ndarray, pooling: str) -> jnp.ndarray:
+    """Partial bag over the rows this shard owns (padded-dense id layout)."""
+    rows = tbl_shard.shape[0]                      # vocab // n_shards
+    b, l = ids.shape
+    local = ids - shard_idx * rows
+    in_shard = (local >= 0) & (local < rows)
+    valid = (jnp.arange(l)[None, :] < lengths[:, None]) & in_shard
+    emb = jnp.take(tbl_shard, jnp.clip(local, 0, rows - 1).reshape(-1),
+                   axis=0).reshape(b, l, -1)
+    emb = emb * valid[..., None].astype(emb.dtype)
+    out = jnp.sum(emb, axis=1)
+    if pooling == "mean":
+        out = out / jnp.maximum(lengths, 1).astype(out.dtype)[:, None]
+    return out
+
+
+def sharded_bag_lookup(table: jnp.ndarray, ids: jnp.ndarray,
+                       lengths: jnp.ndarray, *, mesh: Mesh,
+                       vocab: int, pooling: str = "sum",
+                       model_axis: str = "model",
+                       batch_axes: Tuple[str, ...] = ("data",)) -> jnp.ndarray:
+    """Row-sharded lookup: local partial bag + psum(model).
+
+    table: (V, D) sharded P(model, None); ids/lengths: (B, L)/(B,) sharded
+    P(batch_axes). Output: (B, D) sharded P(batch_axes, None).
+    Collective cost: one (B_local, D) psum over `model` per call — lookups for
+    RO features therefore move B_RO·D bytes instead of B_NRO·D.
+    """
+    n_shards = mesh.shape[model_axis]
+
+    def fn(tbl, i, ln):
+        shard_idx = jax.lax.axis_index(model_axis)
+        part = _local_partial_bag(tbl, i, ln, vocab, n_shards, shard_idx, pooling)
+        return jax.lax.psum(part, model_axis)
+
+    return jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(model_axis, None), P(batch_axes, None), P(batch_axes)),
+        out_specs=P(batch_axes, None))(table, ids, lengths)
+
+
+def sharded_bag_lookup_rs(table: jnp.ndarray, ids: jnp.ndarray,
+                          lengths: jnp.ndarray, *, mesh: Mesh,
+                          vocab: int, pooling: str = "sum",
+                          model_axis: str = "model",
+                          batch_axes: Tuple[str, ...] = ("data",)) -> jnp.ndarray:
+    """Reduce-scatter variant: output dim-sharded over `model`.
+
+    Halves collective bytes vs psum when the consumer (e.g. the interaction
+    arch) can take D/n_shards-sharded embeddings — used by the optimized
+    (beyond-paper) path; see EXPERIMENTS.md §Perf.
+    """
+    n_shards = mesh.shape[model_axis]
+
+    def fn(tbl, i, ln):
+        shard_idx = jax.lax.axis_index(model_axis)
+        part = _local_partial_bag(tbl, i, ln, vocab, n_shards, shard_idx, pooling)
+        return jax.lax.psum_scatter(part, model_axis, scatter_dimension=1,
+                                    tiled=True)
+
+    return jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(model_axis, None), P(batch_axes, None), P(batch_axes)),
+        out_specs=P(batch_axes, model_axis))(table, ids, lengths)

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: embedding-bag (gather + sum-pool) via scalar prefetch.
+
+JAX has no native EmbeddingBag; the jnp path (take + segment_sum) round-trips
+(B·L, D) gathered rows through HBM. This kernel uses the TPU-native pattern:
+the id matrix is *scalar-prefetched*, and the table row for (b, l) is
+selected by the BlockSpec ``index_map`` itself — the DMA engine streams
+exactly the needed (1, D) rows HBM->VMEM while the accumulator for batch row
+b stays resident in VMEM across the L inner steps.
+
+Grid: (B, L); out block (1, D) revisited over l with in-place accumulation.
+Invalid slots (l >= lengths[b]) are masked by routing the DMA to row id 0
+and adding zero.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, len_ref, table_ref, o_ref):
+    b = pl.program_id(0)
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(l < len_ref[b])
+    def _acc():
+        o_ref[...] += table_ref[...].astype(o_ref.dtype)
+
+
+def embedding_bag(table: jnp.ndarray, ids: jnp.ndarray, lengths: jnp.ndarray,
+                  interpret: bool = True) -> jnp.ndarray:
+    """table: (V, D); ids: (B, L) int32; lengths: (B,). Returns (B, D) sums."""
+    b, l = ids.shape
+    v, d = table.shape
+    safe_ids = jnp.where(
+        jnp.arange(l)[None, :] < lengths[:, None],
+        jnp.clip(ids, 0, v - 1), 0).astype(jnp.int32)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, l),
+            in_specs=[
+                # the scalar-prefetched id picks the table row block to DMA
+                pl.BlockSpec((1, d), lambda bi, li, ids, lens: (ids[bi, li], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, d), lambda bi, li, ids, lens: (bi, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        interpret=interpret,
+    )(safe_ids, lengths.astype(jnp.int32), table)
+    return out

@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: fused HSTU pointwise attention with the ROO mask.
+
+The paper's flagship compute hot-spot: HSTU replaces softmax attention with
+``SiLU(QK^T/sqrt(d) + rab) / S`` — no running-max/denominator bookkeeping, so
+one pass over KV blocks with straight accumulation suffices (simpler than
+flash attention, same O(S²) compute, O(blocks) VMEM).
+
+TPU adaptation (DESIGN.md §3): GPU HSTU ships a Triton ragged kernel; here
+q/k/v are tiled into 128-aligned VMEM blocks for the MXU, and the ROO
+structural mask (history causal | target->history | target diagonal) plus
+per-request validity lengths are generated *inside* the kernel from block
+indices + scalar-prefetched lengths — the (S,S) mask never exists in HBM.
+
+Grid: (B*H, S/bq, S/bk), k innermost; output block revisited over k and
+accumulated in place. Relative-position bias is gathered from the compact
+(H, 2*max_rel+1) delta table in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(len_ref, cnt_ref,            # scalar prefetch: (B,), (B,)
+            q_ref, k_ref, v_ref, rab_ref,
+            o_ref, *, n_hist: int, seq: int, n_heads: int,
+            bq: int, bk: int, max_rel: int, use_rab: bool):
+    bh = pl.program_id(0)
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    b = bh // n_heads
+
+    q = q_ref[0].astype(jnp.float32)                     # (bq, dqk)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, dqk)
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (bq, bk)
+    scores = scores * (1.0 / math.sqrt(q.shape[-1]))
+
+    rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    if use_rab:
+        delta = jnp.clip(rows - cols, -max_rel, max_rel) + max_rel
+        bias = jnp.take(rab_ref[0], delta.reshape(-1), axis=0)
+        scores = scores + bias.reshape(bq, bk)
+
+    # ---- ROO structural mask (generated in-kernel) ---------------------------
+    is_hq = rows < n_hist
+    is_hk = cols < n_hist
+    struct = (is_hq & is_hk & (cols <= rows)) | ((~is_hq) & is_hk) | \
+             ((~is_hq) & (~is_hk) & (rows == cols))
+    hl = len_ref[b]
+    tc = cnt_ref[b]
+    valid_r = jnp.where(is_hq, rows < hl, (rows - n_hist) < tc)
+    valid_c = jnp.where(is_hk, cols < hl, (cols - n_hist) < tc)
+    mask = struct & valid_r & valid_c
+
+    a = jax.nn.silu(scores) * (1.0 / seq)
+    a = jnp.where(mask, a, 0.0)
+    v = v_ref[0].astype(jnp.float32)                     # (bk, dv)
+    part = jax.lax.dot_general(a, v, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+
+    o_ref[0] += part.astype(o_ref.dtype)
+
+
+def hstu_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   rab: Optional[jnp.ndarray],
+                   n_hist: int,
+                   hist_lengths: jnp.ndarray,
+                   target_counts: jnp.ndarray,
+                   max_rel_pos: int = 128,
+                   block_q: int = 128, block_k: int = 128,
+                   interpret: bool = True) -> jnp.ndarray:
+    """q,k: (B,H,S,Dqk); v: (B,H,S,Dv); rab: (H, 2*max_rel_pos+1) or None.
+
+    Returns (B,H,S,Dv). ``interpret=True`` executes on CPU (validation);
+    on TPU pass interpret=False.
+    """
+    b, h, s, dqk = q.shape
+    dv = v.shape[-1]
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    use_rab = rab is not None
+    if rab is None:
+        rab = jnp.zeros((h, 2 * max_rel_pos + 1), q.dtype)
+
+    qf = q.reshape(b * h, s, dqk)
+    kf = k.reshape(b * h, s, dqk)
+    vf = v.reshape(b * h, s, dv)
+    rabf = jnp.broadcast_to(rab[None], (b, h, rab.shape[-1])).reshape(
+        b * h, rab.shape[-1])
+
+    grid = (b * h, s // bq, s // bk)
+    kernel = functools.partial(
+        _kernel, n_hist=n_hist, seq=s, n_heads=h, bq=bq, bk=bk,
+        max_rel=max_rel_pos, use_rab=use_rab)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bq, dqk), lambda bh, qi, ki, *s: (bh, qi, 0)),
+                pl.BlockSpec((1, bk, dqk), lambda bh, qi, ki, *s: (bh, ki, 0)),
+                pl.BlockSpec((1, bk, dv), lambda bh, qi, ki, *s: (bh, ki, 0)),
+                pl.BlockSpec((1, rab.shape[-1]),
+                             lambda bh, qi, ki, *s: (bh, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bq, dv),
+                                   lambda bh, qi, ki, *s: (bh, qi, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, dv), v.dtype),
+        interpret=interpret,
+    )(hist_lengths.astype(jnp.int32), target_counts.astype(jnp.int32),
+      qf, kf, vf, rabf)
+    return out.reshape(b, h, s, dv)

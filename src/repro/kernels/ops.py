@@ -1,0 +1,47 @@
+"""jit'd public wrappers over the Pallas kernels with oracle fallback.
+
+``use_pallas``: "auto" (pallas in interpret mode off-TPU), "always",
+"never" (pure-jnp oracle — the default the distributed dry-run lowers, so
+SPMD partitioning sees plain XLA ops; kernels are validated separately).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.dot_interaction import dot_interaction as _dot_pallas
+from repro.kernels.embedding_bag import embedding_bag as _bag_pallas
+from repro.kernels.hstu_attention import hstu_attention as _hstu_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("n_hist", "max_rel_pos", "use_pallas"))
+def hstu_attention(q, k, v, rab, hist_lengths, target_counts, *,
+                   n_hist: int, max_rel_pos: int = 128,
+                   use_pallas: str = "never"):
+    if use_pallas == "never":
+        return _ref.hstu_attention_ref(q, k, v, rab, n_hist, hist_lengths,
+                                       target_counts, max_rel_pos)
+    return _hstu_pallas(q, k, v, rab, n_hist, hist_lengths, target_counts,
+                        max_rel_pos, interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def embedding_bag(table, ids, lengths, *, use_pallas: str = "never"):
+    if use_pallas == "never":
+        return _ref.embedding_bag_ref(table, ids, lengths)
+    return _bag_pallas(table, ids, lengths, interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def dot_interaction(dense_out, sparse_embs, *, use_pallas: str = "never"):
+    if use_pallas == "never":
+        return _ref.dot_interaction_ref(dense_out, sparse_embs)
+    return _dot_pallas(dense_out, sparse_embs, interpret=not _on_tpu())

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernel tests assert_allclose against, and the
+implementations the models use on CPU (and whenever ``use_pallas=False``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hstu_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                       rab: jnp.ndarray | None,
+                       n_hist: int,
+                       hist_lengths: jnp.ndarray,
+                       target_counts: jnp.ndarray,
+                       max_rel_pos: int = 128) -> jnp.ndarray:
+    """HSTU pointwise attention with the ROO mask.
+
+    q, k: (B, H, S, Dqk); v: (B, H, S, Dv); rab: (H, 2*max_rel_pos+1) learned
+    relative-position bias table or None. S = n_hist + m_targets.
+    Mask: history causal; targets attend history + self only; valid lengths.
+    Returns (B, H, S, Dv).
+    """
+    b, h, s, dqk = q.shape
+    m_targets = s - n_hist
+    scores = jnp.einsum("bhid,bhjd->bhij", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(dqk, jnp.float32))
+    if rab is not None:
+        pos = jnp.arange(s)
+        delta = jnp.clip(pos[:, None] - pos[None, :],
+                         -max_rel_pos, max_rel_pos) + max_rel_pos
+        scores = scores + rab[:, delta][None].astype(scores.dtype)
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    is_hq, is_hk = i < n_hist, j < n_hist
+    struct = (is_hq & is_hk & (j <= i)) | (~is_hq & is_hk) | \
+             (~is_hq & ~is_hk & (i == j))
+    pos = jnp.arange(s)
+    valid = jnp.where(pos[None, :] < n_hist,
+                      pos[None, :] < hist_lengths[:, None],
+                      (pos[None, :] - n_hist) < target_counts[:, None])
+    mask = struct[None] & valid[:, None, :] & valid[:, :, None]   # (B,S,S)
+    a = jax.nn.silu(scores) / jnp.asarray(s, jnp.float32)
+    a = a * mask[:, None].astype(a.dtype)
+    return jnp.einsum("bhij,bhjd->bhid", a.astype(v.dtype), v)
+
+
+def embedding_bag_ref(table: jnp.ndarray, ids: jnp.ndarray,
+                      lengths: jnp.ndarray) -> jnp.ndarray:
+    """Sum-pooled embedding bag. table: (V, D); ids: (B, L); lengths: (B,)."""
+    b, l = ids.shape
+    valid = jnp.arange(l)[None, :] < lengths[:, None]
+    emb = jnp.take(table, jnp.clip(ids, 0, table.shape[0] - 1).reshape(-1),
+                   axis=0).reshape(b, l, -1)
+    return jnp.sum(emb * valid[..., None].astype(emb.dtype), axis=1)
+
+
+def dot_interaction_ref(dense_out: jnp.ndarray,
+                        sparse_embs: jnp.ndarray) -> jnp.ndarray:
+    """DLRM dot interaction. dense_out: (B, D); sparse_embs: (B, F, D).
+    Returns (B, D + (F+1)F/2) — dense concat strict-lower-tri pairwise dots."""
+    t = jnp.concatenate([dense_out[:, None, :], sparse_embs], axis=1)
+    z = jnp.einsum("bfd,bgd->bfg", t, t, preferred_element_type=jnp.float32)
+    f = t.shape[1]
+    i, j = jnp.tril_indices(f, k=-1)
+    return jnp.concatenate([dense_out, z[:, i, j].astype(dense_out.dtype)],
+                           axis=1)

@@ -1,0 +1,143 @@
+"""DLRM (Naumov et al. 2019) — MLPerf benchmark config, ROO-capable.
+
+Assigned config (dlrm-mlperf): 13 dense features, 26 sparse fields,
+embed_dim=128, bottom MLP 13-512-256-128, top MLP 1024-1024-512-256-1,
+dot interaction, Criteo-1TB-scale vocabs.
+
+ROO applicability (DESIGN.md §4): the 13 dense features and the user-side
+subset of sparse fields are RO; item-side fields are NRO. Under ROO the
+bottom MLP + RO lookups run at B_RO and fan out at the interaction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fanout import fanout
+from repro.core.roo_batch import ROOBatch
+from repro.embeddings.bag import bag_lookup_dense
+from repro.embeddings.sharded import EmbeddingCollectionConfig, TableConfig, init_tables
+from repro.models.interactions import dot_interaction
+from repro.models.mlp import mlp_apply, mlp_init
+
+# MLPerf Criteo-1TB row counts (capped variant used by the reference v1
+# benchmark; total ~882M rows at dim 128).
+MLPERF_VOCABS = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771,
+    25641295, 39664984, 585935, 12972, 108, 36)
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    n_dense: int = 13
+    embed_dim: int = 128
+    bot_mlp: Tuple[int, ...] = (13, 512, 256, 128)
+    top_mlp: Tuple[int, ...] = (1024, 1024, 512, 256, 1)
+    vocabs: Tuple[int, ...] = MLPERF_VOCABS
+    n_ro_fields: int = 13       # first k sparse fields treated as user-side
+    multi_hot: int = 1          # ids per field (MLPerf v1 is one-hot)
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocabs)
+
+    SHARD_MIN_ROWS = 65536      # tables below this are replicated
+    ROW_PAD = 512               # sharded tables pad rows to this multiple
+
+    def padded_vocab(self, v: int) -> int:
+        if v < self.SHARD_MIN_ROWS:
+            return v
+        return ((v + self.ROW_PAD - 1) // self.ROW_PAD) * self.ROW_PAD
+
+    def tables(self) -> EmbeddingCollectionConfig:
+        return EmbeddingCollectionConfig(tuple(
+            TableConfig(name=f"t{i}", vocab=self.padded_vocab(v),
+                        dim=self.embed_dim,
+                        side="ro" if i < self.n_ro_fields else "nro")
+            for i, v in enumerate(self.vocabs)))
+
+    def top_in_dim(self) -> int:
+        f = self.n_sparse + 1
+        return self.embed_dim + f * (f - 1) // 2
+
+
+def dlrm_init(rng: jax.Array, cfg: DLRMConfig, dtype=jnp.float32) -> Dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    top_dims = (cfg.top_in_dim(),) + cfg.top_mlp[1:]
+    return {
+        "tables": init_tables(k1, cfg.tables(), dtype),
+        "bot_mlp": mlp_init(k2, cfg.bot_mlp, dtype),
+        "top_mlp": mlp_init(k3, top_dims, dtype),
+    }
+
+
+def _field_lookup(params: Dict, cfg: DLRMConfig, ids: jnp.ndarray,
+                  lengths: jnp.ndarray, fields) -> jnp.ndarray:
+    """ids: (B, n_fields, multi_hot) -> (B, n_fields, D)."""
+    embs = []
+    for j, i_field in enumerate(fields):
+        tbl = params["tables"][f"t{i_field}"]
+        embs.append(bag_lookup_dense(tbl, ids[:, j, :], lengths[:, j]))
+    return jnp.stack(embs, axis=1)
+
+
+def dlrm_forward_from_embs(params: Dict, cfg: DLRMConfig,
+                           ro_dense: jnp.ndarray,
+                           ro_embs: jnp.ndarray, nro_embs: jnp.ndarray,
+                           segment_ids: jnp.ndarray) -> jnp.ndarray:
+    """Interaction + MLPs given already-gathered embeddings.
+
+    ro_embs: (B_RO, n_ro_fields, D); nro_embs: (B_NRO, n_nro_fields, D).
+    Split out so the sparse-update training path can differentiate wrt the
+    gathered rows instead of the full tables.
+    """
+    dense_out = mlp_apply(params["bot_mlp"], ro_dense)            # (B_RO, D)
+    ro_pack = jnp.concatenate([dense_out[:, None, :], ro_embs], axis=1)
+    ro_at_nro = fanout(ro_pack, segment_ids)                      # one fanout
+    sparse = jnp.concatenate([ro_at_nro[:, 1:, :], nro_embs], axis=1)
+    z = dot_interaction(ro_at_nro[:, 0, :], sparse)
+    return mlp_apply(params["top_mlp"], z)[:, 0]
+
+
+def dlrm_forward_roo(params: Dict, cfg: DLRMConfig,
+                     ro_dense: jnp.ndarray,
+                     ro_ids: jnp.ndarray, ro_lengths: jnp.ndarray,
+                     nro_ids: jnp.ndarray, nro_lengths: jnp.ndarray,
+                     segment_ids: jnp.ndarray) -> jnp.ndarray:
+    """ROO path: user side at B_RO, fanned out once.
+
+    ro_dense: (B_RO, 13); ro_ids: (B_RO, n_ro_fields, mh);
+    nro_ids: (B_NRO, n_nro_fields, mh). Returns (B_NRO,) logits.
+    """
+    ro_fields = range(cfg.n_ro_fields)
+    nro_fields = range(cfg.n_ro_fields, cfg.n_sparse)
+    ro_embs = _field_lookup(params, cfg, ro_ids, ro_lengths, ro_fields)
+    nro_embs = _field_lookup(params, cfg, nro_ids, nro_lengths, nro_fields)
+    return dlrm_forward_from_embs(params, cfg, ro_dense, ro_embs, nro_embs,
+                                  segment_ids)
+
+
+def dlrm_forward_impression(params: Dict, cfg: DLRMConfig,
+                            dense: jnp.ndarray, ids: jnp.ndarray,
+                            lengths: jnp.ndarray) -> jnp.ndarray:
+    """Impression-level baseline: everything at B_NRO.
+
+    dense: (B, 13); ids: (B, 26, mh). Returns (B,) logits.
+    """
+    dense_out = mlp_apply(params["bot_mlp"], dense)
+    embs = _field_lookup(params, cfg, ids, lengths, range(cfg.n_sparse))
+    z = dot_interaction(dense_out, embs)
+    return mlp_apply(params["top_mlp"], z)[:, 0]
+
+
+def dlrm_flops_per_example(cfg: DLRMConfig) -> int:
+    """Analytic dense forward FLOPs per impression (impression-level)."""
+    from repro.models.mlp import mlp_flops
+    f = cfg.n_sparse + 1
+    top_dims = (cfg.top_in_dim(),) + cfg.top_mlp[1:]
+    return (mlp_flops(cfg.bot_mlp, 1) + mlp_flops(top_dims, 1)
+            + 2 * f * f * cfg.embed_dim)

@@ -1,0 +1,108 @@
+"""Generative Recommender (GR) on HSTU (paper §3.3; Zhai et al. 2024).
+
+The ROO-enabled architecture: one autoregressive HSTU stack over the user's
+interleaved (item, action) history, used two ways:
+
+  * retrieval  — next-item prediction over the history (targets NOT in the
+    sequence); sampled softmax against the item vocab.
+  * ranking    — the request's m targets appended under the ROO mask
+    (core.sequence), multi-task logits read from target positions.
+
+This is the model the paper scales 7x under the same training compute; the
+hstu_gr config instantiates it at production width.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hstu import HSTUConfig, hstu_apply, hstu_init
+from repro.core.masks import history_mask
+from repro.core.roo_batch import ROOBatch
+from repro.core.sequence import (ROOSequenceConfig, encode_roo,
+                                 gather_targets_to_ro, scatter_targets_to_nro)
+from repro.models.mlp import mlp_apply, mlp_init
+
+
+@dataclasses.dataclass(frozen=True)
+class GRConfig:
+    n_items: int
+    hstu: HSTUConfig = None
+    hist_len: int = 256
+    m_targets: int = 16
+    n_tasks: int = 2
+    mode: str = "ranking"        # "ranking" | "retrieval"
+
+    def seq_cfg(self) -> ROOSequenceConfig:
+        return ROOSequenceConfig(self.hstu, self.hist_len, self.m_targets)
+
+
+def gr_init(rng: jax.Array, cfg: GRConfig, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(rng, 4)
+    d = cfg.hstu.d_model
+    return {
+        "item_emb": (jax.random.normal(ks[0], (cfg.n_items, d)) * 0.02).astype(dtype),
+        "act_emb": (jax.random.normal(ks[1], (4, d)) * 0.02).astype(dtype),
+        "hstu": hstu_init(ks[2], cfg.hstu, dtype),
+        "task_head": mlp_init(ks[3], (d, 2 * d, cfg.n_tasks), dtype),
+    }
+
+
+def _embed_history(params: Dict, cfg: GRConfig, batch: ROOBatch) -> jnp.ndarray:
+    ids = batch.history_ids[:, :cfg.hist_len]
+    acts = batch.history_actions[:, :cfg.hist_len]
+    e = jnp.take(params["item_emb"], jnp.clip(ids, 0, cfg.n_items - 1), axis=0)
+    a = jnp.take(params["act_emb"], jnp.clip(acts, 0, 3), axis=0)
+    return e + a
+
+
+def gr_ranking_logits(params: Dict, cfg: GRConfig, batch: ROOBatch) -> jnp.ndarray:
+    """ROO ranking: encode [history | m targets] once per request;
+    (B_NRO, n_tasks) logits."""
+    hist = _embed_history(params, cfg, batch)
+    lengths = jnp.minimum(batch.history_lengths, cfg.hist_len)
+    tgt_nro = jnp.take(params["item_emb"],
+                       jnp.clip(batch.item_ids, 0, cfg.n_items - 1), axis=0)
+    tgt_ro = gather_targets_to_ro(tgt_nro, batch, cfg.m_targets)
+    enc = encode_roo({"hstu": params["hstu"]}, cfg.seq_cfg(), hist, lengths,
+                     tgt_ro, batch.num_impressions)          # (B_RO, m, d)
+    feats = scatter_targets_to_nro(enc, batch, cfg.m_targets)
+    return mlp_apply(params["task_head"], feats)
+
+
+def gr_ranking_loss(params: Dict, cfg: GRConfig, batch: ROOBatch) -> jnp.ndarray:
+    logits = gr_ranking_logits(params, cfg, batch)
+    y = jnp.stack([batch.labels[:, 0],
+                   (batch.labels[:, min(1, batch.labels.shape[1] - 1)] > 0
+                    ).astype(logits.dtype)], -1)[:, :cfg.n_tasks]
+    w = batch.impression_mask().astype(logits.dtype)[:, None]
+    bce = jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    return jnp.sum(bce * w) / jnp.maximum(jnp.sum(w) * cfg.n_tasks, 1.0)
+
+
+def gr_retrieval_loss(params: Dict, cfg: GRConfig, batch: ROOBatch,
+                      temperature: float = 0.05) -> jnp.ndarray:
+    """Autoregressive next-item prediction over the history (RO-only) plus
+    in-batch candidate softmax — the GR retrieval objective."""
+    hist = _embed_history(params, cfg, batch)
+    lengths = jnp.minimum(batch.history_lengths, cfg.hist_len)
+    mask = history_mask(lengths, cfg.hist_len)
+    enc = hstu_apply(params["hstu"], cfg.hstu, hist, mask)   # (B_RO, n, d)
+    # position t predicts item t+1
+    q = enc[:, :-1, :]
+    nxt = batch.history_ids[:, 1:cfg.hist_len]
+    valid = (jnp.arange(cfg.hist_len - 1)[None] < (lengths - 1)[:, None])
+    # sampled softmax against the in-batch item candidates
+    cand = jnp.take(params["item_emb"],
+                    jnp.clip(batch.item_ids, 0, cfg.n_items - 1), axis=0)
+    logits = jnp.einsum("bnd,cd->bnc", q, cand) / temperature
+    tgt_emb = jnp.take(params["item_emb"],
+                       jnp.clip(nxt, 0, cfg.n_items - 1), axis=0)
+    pos = jnp.sum(q * tgt_emb, axis=-1) / temperature        # (B_RO, n-1)
+    lse = jnp.logaddexp(jax.scipy.special.logsumexp(logits, axis=-1), pos)
+    nll = lse - pos
+    w = valid.astype(nll.dtype)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)

@@ -1,0 +1,125 @@
+"""KV-cache prefill + decode for the LM family.
+
+``decode_*`` / ``long_*`` dry-run shapes lower ``serve_step`` — one new
+token against a ``seq_len`` KV cache. Per-step decode attention is O(S·d)
+(linear, not quadratic), which is why long_500k decode is lowered even for
+full-attention archs (DESIGN.md §4).
+
+Cache layout: (L, B, S_max, KV, dh) per K and V.
+Sharding: batch over the data axes, cache *sequence* over `model`
+(flash-decoding-style split-K: the softmax reduction over the sharded seq
+axis becomes psum collectives inserted by GSPMD). For batch=1 long-context,
+the seq axis shards over (data, model) = all chips.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import ShardingPlan, replicated_plan
+from repro.models.lm.moe import moe_layer
+from repro.models.lm.transformer import (LMConfig, _attention, _mlp, _rmsnorm,
+                                         lm_forward, lm_logits, rope)
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    """How the KV cache shards: seq axis entries + batch axis entries."""
+    batch_axes: object        # e.g. ("data",) or None (replicated)
+    seq_axes: object          # e.g. "model" or ("data", "model")
+
+
+def init_cache(cfg: LMConfig, batch: int, s_max: int,
+               dtype=jnp.bfloat16) -> Dict:
+    shape = (cfg.n_layers, batch, s_max, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def cache_specs(cfg: LMConfig, plan: ShardingPlan,
+                cs: CacheSpec) -> Dict:
+    return {"k": P(None, cs.batch_axes, cs.seq_axes, None, None),
+            "v": P(None, cs.batch_axes, cs.seq_axes, None, None),
+            "pos": P()}
+
+
+def prefill(params: Dict, cfg: LMConfig, tokens: jnp.ndarray,
+            plan: Optional[ShardingPlan] = None,
+            s_max: Optional[int] = None,
+            cs: Optional[CacheSpec] = None) -> Tuple[jnp.ndarray, Dict]:
+    """Full forward over the prompt; returns (last-position logits, cache)."""
+    plan = plan or replicated_plan()
+    b, s = tokens.shape
+    s_max = s_max or s
+    hidden, (k, v) = lm_forward(params, cfg, tokens, plan, collect_kv=True)
+    logits = lm_logits(params, cfg, hidden[:, -1:, :], plan)[:, 0]
+    pad = s_max - s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16),
+             "pos": jnp.asarray(s, jnp.int32)}
+    if plan.enabled and cs is not None:
+        cache = {n: plan.constrain(cache[n], *spec)
+                 for (n, spec) in cache_specs(cfg, plan, cs).items()}
+    return logits, cache
+
+
+def serve_step(params: Dict, cfg: LMConfig, cache: Dict,
+               tokens: jnp.ndarray,
+               plan: Optional[ShardingPlan] = None,
+               cs: Optional[CacheSpec] = None) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step. tokens: (B, 1) -> (logits (B, V), updated cache)."""
+    plan = plan or replicated_plan()
+    b = tokens.shape[0]
+    cdt = cfg.cdtype
+    s_max = cache["k"].shape[2]
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)   # (B,1,d)
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    kv_pos = jnp.broadcast_to(jnp.arange(s_max, dtype=jnp.int32)[None],
+                              (b, s_max))
+    kv_valid = kv_pos <= pos                                     # causal+filled
+
+    layers = jax.tree.map(lambda p: p.astype(cdt) if p.dtype != jnp.int32 else p,
+                          params["layers"])
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ck_spec = (None, (cs.batch_axes if cs else None),
+               (cs.seq_axes if cs else None), None, None)
+
+    def body(x, inputs):
+        lyr, k_c, v_c = inputs
+        xn = _rmsnorm(x, lyr["attn_norm"])
+        q = (xn @ lyr["wq"]).reshape(b, 1, h, dh)
+        kvp = (xn @ lyr["wkv"]).reshape(b, 1, 2, kvh, dh)
+        k_new = rope(kvp[:, :, 0], positions, cfg.rope_theta)
+        v_new = kvp[:, :, 1]
+        q = rope(q, positions, cfg.rope_theta)
+        # insert new K/V at `pos`
+        k_c = jax.lax.dynamic_update_slice(
+            k_c, k_new.astype(k_c.dtype), (0, pos, 0, 0))
+        v_c = jax.lax.dynamic_update_slice(
+            v_c, v_new.astype(v_c.dtype), (0, pos, 0, 0))
+        if plan.enabled and cs is not None:
+            k_c = plan.constrain(k_c, *ck_spec[1:])
+            v_c = plan.constrain(v_c, *ck_spec[1:])
+        attn = _attention(q, k_c.astype(cdt), v_c.astype(cdt),
+                          positions, kv_pos, cfg, kv_valid=kv_valid)
+        y = attn.reshape(b, 1, h * dh) @ lyr["wo"]
+        x = x + y
+        xn = _rmsnorm(x, lyr["mlp_norm"])
+        if cfg.moe is not None:
+            y = moe_layer(xn, lyr, cfg.moe, plan, seq_sharded=False)
+        else:
+            y = _mlp(xn, lyr, cfg, plan)
+        return x + y, (k_c, v_c)
+
+    x, (k_all, v_all) = jax.lax.scan(body, x, (layers, cache["k"], cache["v"]))
+    x = _rmsnorm(x, params["final_norm"])
+    logits = lm_logits(params, cfg, x, plan)[:, 0]
+    new_cache = {"k": k_all, "v": v_all, "pos": pos + 1}
+    return logits, new_cache

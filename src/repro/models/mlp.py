@@ -1,0 +1,34 @@
+"""Plain MLP + initializers shared across the model zoo."""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def mlp_init(rng: jax.Array, dims: Sequence[int], dtype=jnp.float32) -> Dict:
+    """dims = [in, h1, ..., out]."""
+    layers = []
+    keys = jax.random.split(rng, len(dims) - 1)
+    for i, k in enumerate(keys):
+        fan_in, fan_out = dims[i], dims[i + 1]
+        w = jax.random.normal(k, (fan_in, fan_out)) * (2.0 / (fan_in + fan_out)) ** 0.5
+        layers.append({"w": w.astype(dtype), "b": jnp.zeros((fan_out,), dtype)})
+    return {"layers": layers}
+
+
+def mlp_apply(params: Dict, x: jnp.ndarray, activation=jax.nn.relu,
+              final_activation=None) -> jnp.ndarray:
+    n = len(params["layers"])
+    for i, lyr in enumerate(params["layers"]):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < n - 1:
+            x = activation(x)
+        elif final_activation is not None:
+            x = final_activation(x)
+    return x
+
+
+def mlp_flops(dims: Sequence[int], batch: int) -> int:
+    return 2 * batch * sum(dims[i] * dims[i + 1] for i in range(len(dims) - 1))

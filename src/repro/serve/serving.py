@@ -1,0 +1,68 @@
+"""ROO inference (paper §2.2): the serving stack shares the training format.
+
+A serving request is {user (RO) features, m candidate items} — exactly one
+ROOSample without labels. The server batches requests into a ROOBatch and
+calls the SAME model forward used in training: user-side computation runs
+once per request on-device (deferred fanout *inside* the model), eliminating
+the client-side user-feature broadcast + server-side dedup the paper calls
+out as premature complexity.
+
+Also provides the three recsys serving regimes of the assigned shapes:
+  serve_p99   — small online batches (512);
+  serve_bulk  — offline scoring (262 144);
+  retrieval   — 1 user vs 10⁶ candidates (batched dot, no loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.joiner import ROOSample
+from repro.core.roo_batch import ROOBatch
+from repro.data.batcher import BatcherConfig, ROOBatcher
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    b_ro: int = 64
+    b_nro: int = 512
+    hist_len: int = 64
+
+
+class ROOServer:
+    """Batched request server around a jit'd scoring function.
+
+    score_fn(params, batch) -> (B_NRO,) or (B_NRO, n_tasks) scores.
+    """
+
+    def __init__(self, params, score_fn: Callable, cfg: ServeConfig):
+        self.params = params
+        self.cfg = cfg
+        self._score = jax.jit(score_fn)
+        self._batcher = ROOBatcher(BatcherConfig(
+            b_ro=cfg.b_ro, b_nro=cfg.b_nro, hist_len=cfg.hist_len))
+
+    def score_requests(self, requests: List[ROOSample]) -> List[np.ndarray]:
+        """Returns per-request score arrays aligned with request.item_ids."""
+        out: List[np.ndarray] = []
+        for batch in self._batcher.batches(requests):
+            scores = np.asarray(self._score(self.params, batch))
+            seg = np.asarray(batch.segment_ids)
+            for r in range(batch.b_ro):
+                sel = scores[seg == r]
+                if len(sel):
+                    out.append(sel)
+        return out[:len(requests)]
+
+
+def retrieval_scoring(user_repr: jnp.ndarray,
+                      candidate_repr: jnp.ndarray,
+                      k: int = 100):
+    """1-vs-N candidate scoring: (d,) x (N, d) -> top-k (scores, indices).
+    One matvec — never a loop over candidates."""
+    scores = candidate_repr @ user_repr
+    return jax.lax.top_k(scores, k)

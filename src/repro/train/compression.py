@@ -1,0 +1,67 @@
+"""Gradient compression with error feedback for cross-pod all-reduce.
+
+At 2+ pods the inter-pod links are the scarce resource; compressing the
+dense-gradient all-reduce to bf16 (or int8 with per-tensor scale) halves
+(quarters) the cross-pod bytes. Error feedback (Karimireddy et al. 2019)
+accumulates the quantization residual locally so compression introduces no
+bias into convergence — property-tested in tests/test_compression.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def compress_bf16(g: jnp.ndarray) -> jnp.ndarray:
+    return g.astype(jnp.bfloat16)
+
+
+def decompress_bf16(g: jnp.ndarray) -> jnp.ndarray:
+    return g.astype(jnp.float32)
+
+
+def compress_int8(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_grads(grads: Any, error: Any,
+                      mode: str = "bf16") -> Tuple[Any, Any]:
+    """Returns (compressed-then-decompressed grads, new error state).
+
+    The returned grads are what the all-reduce would transport; callers
+    feed them to the optimizer. error' = (g + error) - decompress(compress).
+    """
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        if mode == "bf16":
+            sent = decompress_bf16(compress_bf16(g32))
+        elif mode == "int8":
+            q, s = compress_int8(g32)
+            sent = decompress_int8(q, s)
+        else:
+            sent = g32
+        return sent, g32 - sent
+
+    out = jax.tree.map(one, grads, error)
+    sent = jax.tree.map(lambda o: o[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_e = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return sent, new_e
+
+
+def compressed_bytes(grads: Any, mode: str = "bf16") -> int:
+    per = {"bf16": 2, "int8": 1, "none": 4}[mode]
+    return sum(x.size * per for x in jax.tree.leaves(grads))

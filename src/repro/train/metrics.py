@@ -1,0 +1,52 @@
+"""Evaluation metrics: Normalized Entropy (NE) and Recall@K.
+
+NE (He et al. 2014) = cross-entropy of the model / cross-entropy of the
+background CTR predictor — the paper's ranking metric (lower is better;
+NE < 1 beats predicting the base rate).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bce(logits: jnp.ndarray, labels: jnp.ndarray,
+        weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    l = jnp.maximum(logits, 0) - logits * labels + \
+        jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    if weights is None:
+        return jnp.mean(l)
+    return jnp.sum(l * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+
+
+def normalized_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                       weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    """NE = CE(model) / CE(base rate)."""
+    if weights is None:
+        weights = jnp.ones_like(labels)
+    ce = bce(logits, labels, weights)
+    p = jnp.sum(labels * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+    p = jnp.clip(p, 1e-6, 1 - 1e-6)
+    ce_base = -(p * jnp.log(p) + (1 - p) * jnp.log(1 - p))
+    return ce / ce_base
+
+
+def recall_at_k(user_repr: jnp.ndarray, item_repr: jnp.ndarray,
+                positives: jnp.ndarray, k: int = 100) -> jnp.ndarray:
+    """user_repr: (B, d); item_repr: (N, d); positives: (B,) item indices.
+    Fraction of users whose positive lands in their top-k scores."""
+    scores = user_repr @ item_repr.T                    # (B, N)
+    pos_score = jnp.take_along_axis(scores, positives[:, None], axis=1)[:, 0]
+    rank = jnp.sum(scores > pos_score[:, None], axis=1)
+    return jnp.mean((rank < k).astype(jnp.float32))
+
+
+def auc(logits: jnp.ndarray, labels: jnp.ndarray, n_bins: int = 1024):
+    """Histogram-approximated ROC-AUC (streaming-friendly)."""
+    p = jax.nn.sigmoid(logits)
+    bins = jnp.clip((p * n_bins).astype(jnp.int32), 0, n_bins - 1)
+    pos = jnp.bincount(bins, weights=labels, length=n_bins)
+    neg = jnp.bincount(bins, weights=1 - labels, length=n_bins)
+    cneg = jnp.cumsum(neg) - neg
+    auc_num = jnp.sum(pos * (cneg + 0.5 * neg))
+    return auc_num / jnp.maximum(jnp.sum(pos) * jnp.sum(neg), 1.0)

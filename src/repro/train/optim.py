@@ -1,0 +1,152 @@
+"""In-repo optimizers (no external deps): Adam, row-wise Adagrad, SGD.
+
+Row-wise Adagrad is the production embedding optimizer (one accumulator
+scalar per table ROW instead of per element — 1/D the state, the TorchRec
+default for huge tables); Adam handles the dense parameters. ``make_mixed``
+routes by parameter path, which is exactly how DLRM deployments configure it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable        # (grads, state, params) -> (new_params, new_state)
+
+
+def adam(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0,
+         grad_clip: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"m": zeros,
+                "v": jax.tree.map(jnp.zeros_like, zeros),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        if grad_clip > 0:
+            gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                              for g in jax.tree.leaves(grads)) + 1e-12)
+            scale = jnp.minimum(1.0, grad_clip / gn)
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        t = state["t"] + 1
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * g32 * g32
+            step = lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                step = step + lr * weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def rowwise_adagrad(lr: float = 0.01, eps: float = 1e-8) -> Optimizer:
+    """One accumulator per embedding row: state[p] has shape p.shape[:1]."""
+    def init(params):
+        return {"acc": jax.tree.map(
+            lambda p: jnp.zeros(p.shape[:1], jnp.float32), params)}
+
+    def update(grads, state, params):
+        def upd(p, g, a):
+            g32 = g.astype(jnp.float32)
+            row_sq = jnp.mean(g32 * g32, axis=tuple(range(1, g32.ndim)))
+            a = a + row_sq
+            scale = lr / (jnp.sqrt(a) + eps)
+            step = g32 * scale.reshape((-1,) + (1,) * (g32.ndim - 1))
+            return (p.astype(jnp.float32) - step).astype(p.dtype), a
+
+        out = jax.tree.map(upd, params, grads, state["acc"])
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_a = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"acc": new_a}
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: float = 0.1, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum:
+            return {"mom": jax.tree.map(
+                lambda p: jnp.zeros_like(p, jnp.float32), params)}
+        return {}
+
+    def update(grads, state, params):
+        if momentum:
+            new_mom = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state["mom"], grads)
+            new_p = jax.tree.map(
+                lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+                params, new_mom)
+            return new_p, {"mom": new_mom}
+        new_p = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new_p, {}
+
+    return Optimizer(init, update)
+
+
+def make_mixed(dense_opt: Optimizer, embedding_opt: Optimizer,
+               is_embedding: Callable[[Tuple], bool]) -> Optimizer:
+    """Route params by tree path: embedding tables -> embedding_opt,
+    everything else -> dense_opt (the standard DLRM setup)."""
+
+    def _mask(params):
+        """Static (trace-time) embedding mask from tree paths."""
+        flat = jax.tree_util.tree_flatten_with_path(params)[0]
+        return [is_embedding(tuple(str(k) for k in path)) for path, _ in flat]
+
+    def init(params):
+        emb_mask = _mask(params)
+        leaves = jax.tree.leaves(params)
+        emb_leaves = [l for l, m in zip(leaves, emb_mask) if m]
+        dense_leaves = [l for l, m in zip(leaves, emb_mask) if not m]
+        return {
+            "emb": embedding_opt.init(emb_leaves),
+            "dense": dense_opt.init(dense_leaves),
+        }
+
+    def update(grads, state, params):
+        emb_mask = _mask(params)
+        g_leaves = jax.tree.leaves(grads)
+        p_leaves = jax.tree.leaves(params)
+        ge = [g for g, m in zip(g_leaves, emb_mask) if m]
+        pe = [p for p, m in zip(p_leaves, emb_mask) if m]
+        gd = [g for g, m in zip(g_leaves, emb_mask) if not m]
+        pd = [p for p, m in zip(p_leaves, emb_mask) if not m]
+        new_pe, new_se = embedding_opt.update(ge, state["emb"], pe)
+        new_pd, new_sd = dense_opt.update(gd, state["dense"], pd)
+        it_e, it_d = iter(new_pe), iter(new_pd)
+        merged = [next(it_e) if m else next(it_d) for m in emb_mask]
+        new_params = jax.tree.unflatten(jax.tree.structure(params), merged)
+        return new_params, {"emb": new_se, "dense": new_sd}
+
+    return Optimizer(init, update)
+
+
+def default_is_embedding(path: Tuple[str, ...]) -> bool:
+    s = "/".join(path).lower()
+    return any(k in s for k in ("emb", "table"))

@@ -1,0 +1,36 @@
+import os
+import sys
+
+# tests see ONE device (the dry-run sets 512 itself, in a subprocess);
+# a handful of distributed tests spawn subprocesses with their own flags.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.joiner import RequestLevelJoiner
+from repro.data.batcher import BatcherConfig, ROOBatcher
+from repro.data.events import EventSimulator, EventStreamConfig
+
+
+@pytest.fixture(scope="session")
+def event_stream():
+    cfg = EventStreamConfig(n_requests=120, hist_init_max=40, seed=0)
+    return list(EventSimulator(cfg).stream())
+
+
+@pytest.fixture(scope="session")
+def roo_samples(event_stream):
+    return RequestLevelJoiner().join(event_stream)
+
+
+@pytest.fixture(scope="session")
+def roo_batch(roo_samples):
+    return next(ROOBatcher(BatcherConfig(
+        b_ro=16, b_nro=128, hist_len=64)).batches(roo_samples))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
