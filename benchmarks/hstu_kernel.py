@@ -1,0 +1,68 @@
+"""HSTU attention kernel micro-benchmark: fwd and fwd+bwd wall time per
+dispatch backend (docs/KERNELS.md) on a ragged ROO batch.
+
+Emits the standard ``name,us_per_call,derived`` rows:
+  hstu_kernel_fwd_<backend>     — forward only
+  hstu_kernel_fwdbwd_<backend>  — value_and_grad w.r.t. (q, k, v, rab)
+
+On TPU the compiled ``pallas`` backend is measured; elsewhere the
+interpreted kernel is only timed at smoke scale (interpret mode measures
+correctness plumbing, not kernel speed — compiled-vs-chunked is the
+comparison that matters on real hardware).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.masks import roo_spec
+from repro.kernels import dispatch
+
+
+def _case(b, h, s, dqk, dv, n_hist, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    q = jax.random.normal(ks[0], (b, h, s, dqk))
+    k = jax.random.normal(ks[1], (b, h, s, dqk))
+    v = jax.random.normal(ks[2], (b, h, s, dv))
+    rab = jax.random.normal(ks[3], (h, 2 * 128 + 1)) * 0.1
+    hl = jax.random.randint(ks[4], (b,), 1, n_hist + 1)
+    tc = jax.random.randint(ks[5], (b,), 1, s - n_hist + 1)
+    return q, k, v, rab, hl, tc
+
+
+def run(smoke: bool = False) -> None:
+    on_tpu = jax.default_backend() == "tpu"
+    if smoke:
+        b, h, s, dqk, dv, n_hist = 2, 2, 128, 32, 32, 96
+    else:
+        b, h, s, dqk, dv, n_hist = 4, 4, 512, 64, 64, 448
+    backends = ["pallas" if on_tpu else "pallas-interpret", "jnp-chunked"]
+    if smoke or not on_tpu:
+        backends.append("jnp-dense")
+    if not (smoke or on_tpu):
+        backends.remove("pallas-interpret")   # interpret at s=512 is pure
+        # overhead measurement; covered by the smoke row instead
+
+    q, k, v, rab, hl, tc = _case(b, h, s, dqk, dv, n_hist)
+    shape_tag = f"b{b}h{h}s{s}d{dqk}"
+    for be in backends:
+        def fwd(q, k, v, rab, hl, tc, _be=be):
+            spec = roo_spec(hl, tc, n_hist)
+            return dispatch.hstu_attention(q, k, v, rab, spec, backend=_be)
+
+        def loss(q, k, v, rab, hl, tc, _fwd=fwd):
+            return jnp.sum(_fwd(q, k, v, rab, hl, tc) ** 2)
+
+        fwd_j = jax.jit(fwd)
+        bwd_j = jax.jit(jax.value_and_grad(loss, argnums=(0, 1, 2, 3)))
+        emit(f"hstu_kernel_fwd_{be}",
+             time_fn(fwd_j, q, k, v, rab, hl, tc),
+             f"shape={shape_tag};n_hist={n_hist}")
+        emit(f"hstu_kernel_fwdbwd_{be}",
+             time_fn(bwd_j, q, k, v, rab, hl, tc),
+             f"shape={shape_tag};n_hist={n_hist};grads=q,k,v,rab")
+
+
+if __name__ == "__main__":
+    run(smoke=True)

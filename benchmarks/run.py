@@ -7,12 +7,21 @@ Prints ``name,us_per_call,derived`` CSV rows:
   table6_retrieval_flops   — Table 6 relative FLOPs/example
   seq_amortization_*       — §3.3 encoder amortization (9.82x example)
   roofline_*               — §Roofline terms per (arch x shape) from dry-run
+  hstu_kernel_*            — HSTU attention fwd/bwd per dispatch backend
+
+``--smoke`` runs only the fast kernel micro-benchmark at reduced scale —
+the tier-1 perf gate wired into scripts/check.sh.
 """
 import sys
 
 
 def main() -> None:
+    smoke = "--smoke" in sys.argv[1:]
     print("name,us_per_call,derived")
+    from benchmarks import hstu_kernel
+    hstu_kernel.run(smoke=smoke)
+    if smoke:
+        return
     from benchmarks import (join_quality, retrieval_flops, roofline,
                             seq_amortization, storage_volume, throughput)
     storage_volume.run()

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 gate: run before sending a PR.
+#   scripts/check.sh            — full test suite + kernel smoke benchmark
+#   scripts/check.sh -k kernel  — extra args are forwarded to pytest
+#
+# The smoke benchmark exercises the HSTU attention dispatch backends
+# (fwd + bwd) so perf/correctness regressions in the kernel path are
+# caught locally even when only unit tests were touched.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q "$@"
+
+echo "== kernel smoke benchmark =="
+python benchmarks/run.py --smoke

@@ -1,5 +1,11 @@
 """The paper's own model configs (retrieval / ESR / LSR / HSTU-GR) at the
-scale used by examples/ and benchmarks/ (CPU-runnable, production-shaped)."""
+scale used by examples/ and benchmarks/ (CPU-runnable, production-shaped).
+
+``attn_backend`` selects the HSTU attention backend (kernels/dispatch.py);
+None = auto (fused Pallas kernel on TPU, chunked jnp elsewhere).
+"""
+from typing import Optional
+
 from repro.core.hstu import HSTUConfig
 from repro.models.gr import GRConfig
 from repro.models.lsr import LSRConfig
@@ -7,23 +13,30 @@ from repro.models.two_tower import TwoTowerConfig
 
 N_ITEMS = 50000
 
-def retrieval_config(hstu: bool = True) -> TwoTowerConfig:
+def retrieval_config(hstu: bool = True,
+                     attn_backend: Optional[str] = None) -> TwoTowerConfig:
     return TwoTowerConfig(
         n_items=N_ITEMS, user_tower_mode="hstu" if hstu else "mlp",
         hstu=HSTUConfig(d_model=64, n_heads=2, d_qk=32, d_v=32, n_layers=2,
-                        max_rel_pos=64) if hstu else None)
+                        max_rel_pos=64,
+                        attn_backend=attn_backend) if hstu else None)
 
-def esr_config(hstu: bool = True) -> TwoTowerConfig:
+def esr_config(hstu: bool = True,
+               attn_backend: Optional[str] = None) -> TwoTowerConfig:
     return TwoTowerConfig(
         n_items=N_ITEMS, esr_head=True,
         user_tower_mode="hstu" if hstu else "mlp",
         hstu=HSTUConfig(d_model=64, n_heads=2, d_qk=32, d_v=32, n_layers=2,
-                        max_rel_pos=64) if hstu else None)
+                        max_rel_pos=64,
+                        attn_backend=attn_backend) if hstu else None)
 
-def lsr_config(mode: str = "userarch_hstu") -> LSRConfig:
-    return LSRConfig(n_items=N_ITEMS, mode=mode)
+def lsr_config(mode: str = "userarch_hstu",
+               attn_backend: Optional[str] = None) -> LSRConfig:
+    return LSRConfig(n_items=N_ITEMS, mode=mode, attn_backend=attn_backend)
 
-def gr_config(hist_len: int = 64, m_targets: int = 16) -> GRConfig:
+def gr_config(hist_len: int = 64, m_targets: int = 16,
+              attn_backend: Optional[str] = None) -> GRConfig:
     return GRConfig(n_items=N_ITEMS, hist_len=hist_len, m_targets=m_targets,
                     hstu=HSTUConfig(d_model=64, n_heads=2, d_qk=32, d_v=32,
-                                    n_layers=2, max_rel_pos=hist_len))
+                                    n_layers=2, max_rel_pos=hist_len,
+                                    attn_backend=attn_backend))

@@ -19,10 +19,13 @@ is the pure-jnp implementation used as its oracle and for CPU execution.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+import math
+from typing import Dict, Optional, Union
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.masks import MaskSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,6 +38,10 @@ class HSTUConfig:
     max_rel_pos: int = 128         # rab table covers deltas in [-max, max]
     use_rab: bool = True
     eps: float = 1e-6
+    # attention backend (kernels/dispatch.py): None = auto (pallas on TPU,
+    # jnp-chunked elsewhere) | "pallas" | "pallas-interpret" | "jnp-chunked"
+    # | "jnp-dense"
+    attn_backend: Optional[str] = None
 
 
 def _ln(x, eps=1e-6):
@@ -74,14 +81,71 @@ def _rel_bias(rab: jnp.ndarray, s: int, max_rel: int) -> jnp.ndarray:
     return rab[:, delta]          # (H, S, S)
 
 
-def hstu_layer_apply(params: Dict, cfg: HSTUConfig, x: jnp.ndarray,
-                     mask: jnp.ndarray,
-                     attn_fn=None) -> jnp.ndarray:
-    """x: (B, S, d); mask: (B, S, S) bool or (S, S). Returns (B, S, d).
+def hstu_attention_chunked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           rab: Optional[jnp.ndarray], spec: MaskSpec,
+                           max_rel_pos: int = 128,
+                           chunk: int = 128) -> jnp.ndarray:
+    """Blockwise jnp reference path: scores, rab bias, and the ROO mask are
+    produced one q-chunk at a time (sequential ``lax.map``), so the (S, S)
+    tensors never exist in HBM — the off-TPU analogue of the Pallas kernel,
+    and what `jnp-chunked` dispatches to. Matches kernels/ref.py numerics.
 
-    ``attn_fn``: optional override computing the masked pointwise attention
-    (used to swap in the Pallas kernel); signature (q, k, v, bias, mask) with
-    q,k: (B,H,S,dqk), v: (B,H,S,dv) -> (B,H,S,dv).
+    q, k: (B, H, S, Dqk); v: (B, H, S, Dv); rab: (H, 2*max_rel_pos+1) | None.
+    """
+    b, h, s, dqk = q.shape
+    dv = v.shape[-1]
+    cq = min(chunk, s)
+    s_pad = -(-s // cq) * cq
+    qp = (jnp.pad(q, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+          if s_pad != s else q)
+    inv_d = 1.0 / math.sqrt(dqk)
+    inv_n = 1.0 / s
+    n_hist = spec.n_hist
+    hl, tc = spec.hist_lengths, spec.target_counts
+    kf = k.astype(jnp.float32)
+    cols = jnp.arange(s)
+    is_hk = cols < n_hist
+    valid_c = jnp.where(is_hk[None, :], cols[None, :] < hl[:, None],
+                        (cols[None, :] - n_hist) < tc[:, None])      # (B, S)
+
+    def one_chunk(ci):
+        q_c = jax.lax.dynamic_slice(
+            qp, (0, 0, ci * cq, 0), (b, h, cq, dqk)).astype(jnp.float32)
+        rows = ci * cq + jnp.arange(cq)
+        scores = jnp.einsum("bhid,bhjd->bhij", q_c, kf,
+                            preferred_element_type=jnp.float32) * inv_d
+        if rab is not None:
+            delta = jnp.clip(rows[:, None] - cols[None, :],
+                             -max_rel_pos, max_rel_pos) + max_rel_pos
+            scores = scores + rab[:, delta][None].astype(scores.dtype)
+        is_hq = rows < n_hist
+        struct = ((is_hq[:, None] & is_hk[None, :]
+                   & (cols[None, :] <= rows[:, None]))
+                  | (~is_hq[:, None] & is_hk[None, :])
+                  | (~is_hq[:, None] & ~is_hk[None, :]
+                     & (rows[:, None] == cols[None, :])))            # (cq, S)
+        valid_r = jnp.where(is_hq[None, :], rows[None, :] < hl[:, None],
+                            (rows[None, :] - n_hist) < tc[:, None])  # (B, cq)
+        m = struct[None] & valid_r[:, :, None] & valid_c[:, None, :]
+        a = jax.nn.silu(scores) * inv_n
+        a = a * m[:, None].astype(a.dtype)
+        return jnp.einsum("bhij,bhjd->bhid", a.astype(v.dtype), v)
+
+    out = jax.lax.map(one_chunk, jnp.arange(s_pad // cq))
+    out = jnp.moveaxis(out, 0, 2).reshape(b, h, s_pad, dv)
+    return out[:, :, :s, :] if s_pad != s else out
+
+
+def hstu_layer_apply(params: Dict, cfg: HSTUConfig, x: jnp.ndarray,
+                     mask: Union[jnp.ndarray, MaskSpec],
+                     backend: Optional[str] = None) -> jnp.ndarray:
+    """x: (B, S, d). Returns (B, S, d).
+
+    ``mask``: a :class:`MaskSpec` (preferred — routed through
+    kernels/dispatch.py so the mask is generated inside the selected
+    backend) or a dense (B, S, S) / (S, S) bool array (legacy path, which
+    materializes scores + bias in HBM).
+    ``backend`` overrides ``cfg.attn_backend`` for this call.
     """
     b, s, d = x.shape
     h, dqk, dv = cfg.n_heads, cfg.d_qk, cfg.d_v
@@ -92,14 +156,17 @@ def hstu_layer_apply(params: Dict, cfg: HSTUConfig, x: jnp.ndarray,
     k = k.reshape(b, s, h, dqk).transpose(0, 2, 1, 3)
     v = v.reshape(b, s, h, dv).transpose(0, 2, 1, 3)
 
-    if mask.ndim == 2:
-        mask = mask[None]
-    bias = (_rel_bias(params["rab"], s, cfg.max_rel_pos)[None]
-            if cfg.use_rab else None)
-
-    if attn_fn is not None:
-        av = attn_fn(q, k, v, bias, mask)
+    if isinstance(mask, MaskSpec):
+        from repro.kernels import dispatch
+        rab = params["rab"] if cfg.use_rab else None
+        av = dispatch.hstu_attention(q, k, v, rab, mask,
+                                     backend=backend or cfg.attn_backend,
+                                     max_rel_pos=cfg.max_rel_pos)
     else:
+        if mask.ndim == 2:
+            mask = mask[None]
+        bias = (_rel_bias(params["rab"], s, cfg.max_rel_pos)[None]
+                if cfg.use_rab else None)
         scores = jnp.einsum("bhid,bhjd->bhij", q, k) / jnp.sqrt(
             jnp.asarray(dqk, x.dtype))
         if bias is not None:
@@ -115,10 +182,11 @@ def hstu_layer_apply(params: Dict, cfg: HSTUConfig, x: jnp.ndarray,
 
 
 def hstu_apply(params: Dict, cfg: HSTUConfig, x: jnp.ndarray,
-               mask: jnp.ndarray, attn_fn=None) -> jnp.ndarray:
+               mask: Union[jnp.ndarray, MaskSpec],
+               backend: Optional[str] = None) -> jnp.ndarray:
     x = _ln(x, cfg.eps) * params["in_ln_scale"] + params["in_ln_bias"]
     for layer in params["layers"]:
-        x = hstu_layer_apply(layer, cfg, x, mask, attn_fn=attn_fn)
+        x = hstu_layer_apply(layer, cfg, x, mask, backend=backend)
     return x
 
 

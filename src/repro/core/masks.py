@@ -16,6 +16,9 @@ All masks also honor per-request valid history length and valid target count.
 """
 from __future__ import annotations
 
+import dataclasses
+
+import jax
 import jax.numpy as jnp
 
 
@@ -47,6 +50,47 @@ def roo_batch_mask(hist_lengths: jnp.ndarray, target_counts: jnp.ndarray,
                            pos[None, :] < hist_lengths[:, None],
                            (pos[None, :] - n_hist) < target_counts[:, None])
     return base & hist_valid[:, None, :] & hist_valid[:, :, None]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class MaskSpec:
+    """Structured description of the ROO mask — what the kernels consume.
+
+    Instead of materializing a (B, S, S) boolean tensor in HBM, model code
+    passes this spec down to the attention backend; the Pallas kernel and
+    the chunked jnp path regenerate the mask blockwise from it, and only
+    the dense oracle ever materializes it (via :meth:`dense`).
+
+    ``n_hist`` is the padded history length (positions >= n_hist are target
+    slots); a pure causal mask over a history-only sequence is the special
+    case ``n_hist == S`` with ``target_counts == 0``.
+    """
+    n_hist: int
+    hist_lengths: jnp.ndarray     # (B,) valid history per request
+    target_counts: jnp.ndarray    # (B,) valid targets per request
+
+    def dense(self, seq_len: int) -> jnp.ndarray:
+        """Materialize the (B, seq_len, seq_len) bool mask (oracle path)."""
+        return roo_batch_mask(self.hist_lengths, self.target_counts,
+                              self.n_hist, seq_len - self.n_hist)
+
+
+jax.tree_util.register_pytree_node(
+    MaskSpec,
+    lambda m: ((m.hist_lengths, m.target_counts), m.n_hist),
+    lambda n_hist, children: MaskSpec(n_hist, *children))
+
+
+def roo_spec(hist_lengths: jnp.ndarray, target_counts: jnp.ndarray,
+             n_hist: int) -> MaskSpec:
+    """Spec for the [history | targets] ROO sequence."""
+    return MaskSpec(n_hist, hist_lengths, target_counts)
+
+
+def causal_spec(hist_lengths: jnp.ndarray, n_hist: int) -> MaskSpec:
+    """Spec for a history-only causal sequence (no target slots)."""
+    return MaskSpec(n_hist, hist_lengths,
+                    jnp.zeros_like(hist_lengths, jnp.int32))
 
 
 def causal_mask(n: int) -> jnp.ndarray:

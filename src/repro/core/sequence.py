@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hstu import HSTUConfig, hstu_apply, hstu_init
-from repro.core.masks import roo_batch_mask, history_mask
+from repro.core.masks import roo_spec
 from repro.core.roo_batch import ROOBatch
 
 
@@ -65,31 +65,31 @@ def target_positions(batch: ROOBatch, m_targets: int) -> Tuple[jnp.ndarray, jnp.
 def encode_roo(params: Dict, cfg: ROOSequenceConfig,
                hist_emb: jnp.ndarray, hist_lengths: jnp.ndarray,
                target_emb_ro: jnp.ndarray, target_counts: jnp.ndarray,
-               attn_fn=None) -> jnp.ndarray:
+               backend: Optional[str] = None) -> jnp.ndarray:
     """ROO path: one (n+m) sequence per request.
 
     hist_emb: (B_RO, n, d); target_emb_ro: (B_RO, m, d) — targets gathered
     to request-major layout. Returns (B_RO, m, d) encoded target outputs.
+    ``backend`` overrides the attention backend (kernels/dispatch.py).
     """
     x = jnp.concatenate([hist_emb, target_emb_ro], axis=1)   # (B_RO, n+m, d)
-    mask = roo_batch_mask(hist_lengths, target_counts, cfg.n_hist, cfg.m_targets)
-    y = hstu_apply(params["hstu"], cfg.hstu, x, mask, attn_fn=attn_fn)
+    spec = roo_spec(hist_lengths, target_counts, cfg.n_hist)
+    y = hstu_apply(params["hstu"], cfg.hstu, x, spec, backend=backend)
     return y[:, cfg.n_hist:, :]
 
 
 def encode_per_impression(params: Dict, cfg: ROOSequenceConfig,
                           hist_emb: jnp.ndarray, hist_lengths: jnp.ndarray,
                           target_emb: jnp.ndarray,
-                          attn_fn=None) -> jnp.ndarray:
+                          backend: Optional[str] = None) -> jnp.ndarray:
     """Impression-level baseline: (history + 1 target) per impression.
 
     hist_emb: (B_NRO, n, d) — history duplicated per impression;
     target_emb: (B_NRO, d). Returns (B_NRO, d).
     """
     x = jnp.concatenate([hist_emb, target_emb[:, None, :]], axis=1)
-    ones = jnp.ones_like(hist_lengths)
-    mask = roo_batch_mask(hist_lengths, ones, cfg.n_hist, 1)
-    y = hstu_apply(params["hstu"], cfg.hstu, x, mask, attn_fn=attn_fn)
+    spec = roo_spec(hist_lengths, jnp.ones_like(hist_lengths), cfg.n_hist)
+    y = hstu_apply(params["hstu"], cfg.hstu, x, spec, backend=backend)
     return y[:, cfg.n_hist, :]
 
 

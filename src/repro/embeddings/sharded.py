@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.data.jagged import JaggedTensor
+from repro.distributed.sharding import shard_map
 from repro.embeddings.bag import bag_lookup, bag_lookup_dense
 
 
@@ -114,7 +115,7 @@ def sharded_bag_lookup(table: jnp.ndarray, ids: jnp.ndarray,
         part = _local_partial_bag(tbl, i, ln, vocab, n_shards, shard_idx, pooling)
         return jax.lax.psum(part, model_axis)
 
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh,
         in_specs=(P(model_axis, None), P(batch_axes, None), P(batch_axes)),
         out_specs=P(batch_axes, None))(table, ids, lengths)
@@ -139,7 +140,7 @@ def sharded_bag_lookup_rs(table: jnp.ndarray, ids: jnp.ndarray,
         return jax.lax.psum_scatter(part, model_axis, scatter_dimension=1,
                                     tiled=True)
 
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh,
         in_specs=(P(model_axis, None), P(batch_axes, None), P(batch_axes)),
         out_specs=P(batch_axes, model_axis))(table, ids, lengths)

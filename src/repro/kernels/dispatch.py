@@ -1,0 +1,109 @@
+"""Backend dispatch for HSTU attention — the one place that decides how the
+repo's hottest compute path executes.
+
+Backends (see docs/KERNELS.md for the full table):
+
+  pallas           — fused Pallas TPU kernel, forward + backward
+                     (``jax.custom_vjp``), compiled (``interpret=False``)
+  pallas-interpret — same kernels through the Pallas interpreter; runs
+                     anywhere, used for validation and CI
+  jnp-chunked      — blockwise pure-jnp path (core.hstu): scores, bias and
+                     mask are produced per q-chunk so no (S, S) tensor ever
+                     exists in HBM, even off-TPU
+  jnp-dense        — the naive (S, S)-materializing oracle (kernels.ref);
+                     ground truth for parity tests only
+
+Selection precedence, highest first: explicit ``backend=`` argument >
+:func:`use_backend` (scoped, thread-local) > :func:`set_default_backend`
+(process-wide, e.g. the --attn-backend CLI flag) > the
+``REPRO_HSTU_BACKEND`` env var > auto (``pallas`` on TPU, ``jnp-chunked``
+elsewhere). Explicitly configured knobs beat the ambient env var so an
+exported debug override cannot silently win over a CLI flag or a pinned
+``ServeConfig``. Backend resolution happens at trace time, so a jit'd
+train step bakes in whichever backend was active when it first ran.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masks import MaskSpec
+
+BACKENDS = ("pallas", "pallas-interpret", "jnp-chunked", "jnp-dense")
+ENV_VAR = "REPRO_HSTU_BACKEND"
+
+_default_backend: Optional[str] = None
+# scoped override (use_backend): a ContextVar so concurrent servers/threads
+# tracing at the same time cannot leak their backend into each other
+_scoped_backend: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_hstu_scoped_backend", default=None)
+
+
+def _validate(backend: str) -> str:
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown HSTU backend {backend!r}; "
+                         f"expected one of {BACKENDS}")
+    return backend
+
+
+def set_default_backend(backend: Optional[str]) -> None:
+    """Process-wide default (used by launch/train.py --attn-backend)."""
+    global _default_backend
+    _default_backend = _validate(backend) if backend is not None else None
+
+
+def get_default_backend() -> Optional[str]:
+    return _default_backend
+
+
+@contextlib.contextmanager
+def use_backend(backend: Optional[str]):
+    """Scoped backend override (thread-local); ``None`` is a no-op."""
+    if backend is None:
+        yield
+        return
+    token = _scoped_backend.set(_validate(backend))
+    try:
+        yield
+    finally:
+        _scoped_backend.reset(token)
+
+
+def resolve_backend(backend: Optional[str] = None) -> str:
+    for cand in (backend, _scoped_backend.get(), _default_backend,
+                 os.environ.get(ENV_VAR)):
+        if cand:
+            return _validate(cand)
+    return "pallas" if jax.default_backend() == "tpu" else "jnp-chunked"
+
+
+def hstu_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   rab: Optional[jnp.ndarray], spec: MaskSpec,
+                   backend: Optional[str] = None, *,
+                   max_rel_pos: int = 128,
+                   block_q: int = 128, block_k: int = 128) -> jnp.ndarray:
+    """Masked HSTU pointwise attention on the selected backend.
+
+    q, k: (B, H, S, Dqk); v: (B, H, S, Dv); rab: (H, 2*max_rel_pos+1) or
+    None; ``spec`` describes the ROO mask structurally (never densified
+    except on the jnp-dense oracle). All backends are differentiable and
+    agree within test tolerances (tests/test_dispatch.py).
+    """
+    be = resolve_backend(backend)
+    if be in ("pallas", "pallas-interpret"):
+        from repro.kernels.hstu_attention import hstu_attention as _pallas
+        return _pallas(q, k, v, rab, spec.n_hist, spec.hist_lengths,
+                       spec.target_counts, max_rel_pos, block_q, block_k,
+                       interpret=(be == "pallas-interpret"))
+    if be == "jnp-chunked":
+        from repro.core.hstu import hstu_attention_chunked
+        return hstu_attention_chunked(q, k, v, rab, spec,
+                                      max_rel_pos=max_rel_pos, chunk=block_q)
+    from repro.kernels.ref import hstu_attention_ref
+    return hstu_attention_ref(q, k, v, rab, spec.n_hist, spec.hist_lengths,
+                              spec.target_counts, max_rel_pos)

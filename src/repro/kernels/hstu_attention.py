@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: fused HSTU pointwise attention with the ROO mask.
+"""Pallas TPU kernels: fused HSTU pointwise attention with the ROO mask,
+forward AND backward (trainable via ``jax.custom_vjp``).
 
 The paper's flagship compute hot-spot: HSTU replaces softmax attention with
 ``SiLU(QK^T/sqrt(d) + rab) / S`` — no running-max/denominator bookkeeping, so
@@ -11,33 +12,41 @@ structural mask (history causal | target->history | target diagonal) plus
 per-request validity lengths are generated *inside* the kernel from block
 indices + scalar-prefetched lengths — the (S,S) mask never exists in HBM.
 
-Grid: (B*H, S/bq, S/bk), k innermost; output block revisited over k and
-accumulated in place. Relative-position bias is gathered from the compact
-(H, 2*max_rel+1) delta table in VMEM.
+Forward grid: (B*H, S/bq, S/bk), k innermost; output block revisited over k
+and accumulated in place. Relative-position bias is gathered from the
+compact (H, 2*max_rel+1) delta table in VMEM.
+
+Backward recomputes scores blockwise (no O(S²) residuals) in two passes:
+  * dq + drab : grid (B*H, S/bq, S/bk), k innermost — dq accumulates over
+    k blocks; the rab gradient reduces per-diagonal sums of dS into the
+    compact (2*max_rel+1) delta table, revisited across the whole (q, k)
+    sub-grid (summed over batch rows on the host side);
+  * dk + dv   : grid (B*H, S/bk, S/bq), q innermost — both accumulate over
+    q blocks.
+
+Sequence lengths that do not divide the block size are handled by the
+wrapper with pad-and-crop: padded positions read as out-of-range targets,
+which the in-kernel validity mask zeroes out, and the 1/S score scale is
+pinned to the *unpadded* length so numerics are invariant to padding.
 """
 from __future__ import annotations
 
 import functools
 import math
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(len_ref, cnt_ref,            # scalar prefetch: (B,), (B,)
-            q_ref, k_ref, v_ref, rab_ref,
-            o_ref, *, n_hist: int, seq: int, n_heads: int,
-            bq: int, bk: int, max_rel: int, use_rab: bool):
-    bh = pl.program_id(0)
-    qi = pl.program_id(1)
-    ki = pl.program_id(2)
-    b = bh // n_heads
-
-    q = q_ref[0].astype(jnp.float32)                     # (bq, dqk)
-    k = k_ref[0].astype(jnp.float32)                     # (bk, dqk)
+def _block_scores_and_mask(len_ref, cnt_ref, q, k, rab_ref, *,
+                           b: int, qi, ki, n_hist: int,
+                           bq: int, bk: int, max_rel: int, use_rab: bool):
+    """Recompute the pre-activation scores (incl. bias) and the ROO mask for
+    one (bq, bk) tile. q, k are f32 (bq, dqk)/(bk, dqk)."""
     scores = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)              # (bq, bk)
@@ -50,7 +59,7 @@ def _kernel(len_ref, cnt_ref,            # scalar prefetch: (B,), (B,)
         bias = jnp.take(rab_ref[0], delta.reshape(-1), axis=0)
         scores = scores + bias.reshape(bq, bk)
 
-    # ---- ROO structural mask (generated in-kernel) ---------------------------
+    # ---- ROO structural mask (generated in-kernel) --------------------------
     is_hq = rows < n_hist
     is_hk = cols < n_hist
     struct = (is_hq & is_hk & (cols <= rows)) | ((~is_hq) & is_hk) | \
@@ -60,8 +69,30 @@ def _kernel(len_ref, cnt_ref,            # scalar prefetch: (B,), (B,)
     valid_r = jnp.where(is_hq, rows < hl, (rows - n_hist) < tc)
     valid_c = jnp.where(is_hk, cols < hl, (cols - n_hist) < tc)
     mask = struct & valid_r & valid_c
+    return scores, mask, rows, cols
 
-    a = jax.nn.silu(scores) * (1.0 / seq)
+
+def _silu_grad(x):
+    s = jax.nn.sigmoid(x)
+    return s * (1.0 + x * (1.0 - s))
+
+
+def _fwd_kernel(len_ref, cnt_ref,            # scalar prefetch: (B,), (B,)
+                q_ref, k_ref, v_ref, rab_ref,
+                o_ref, *, n_hist: int, scale_len: int, n_heads: int,
+                bq: int, bk: int, max_rel: int, use_rab: bool):
+    bh = pl.program_id(0)
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    b = bh // n_heads
+
+    q = q_ref[0].astype(jnp.float32)                     # (bq, dqk)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, dqk)
+    scores, mask, _, _ = _block_scores_and_mask(
+        len_ref, cnt_ref, q, k, rab_ref, b=b, qi=qi, ki=ki, n_hist=n_hist,
+        bq=bq, bk=bk, max_rel=max_rel, use_rab=use_rab)
+
+    a = jax.nn.silu(scores) * (1.0 / scale_len)
     a = jnp.where(mask, a, 0.0)
     v = v_ref[0].astype(jnp.float32)                     # (bk, dv)
     part = jax.lax.dot_general(a, v, (((1,), (0,)), ((), ())),
@@ -74,38 +105,139 @@ def _kernel(len_ref, cnt_ref,            # scalar prefetch: (B,), (B,)
     o_ref[0] += part.astype(o_ref.dtype)
 
 
-def hstu_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                   rab: Optional[jnp.ndarray],
-                   n_hist: int,
-                   hist_lengths: jnp.ndarray,
-                   target_counts: jnp.ndarray,
-                   max_rel_pos: int = 128,
-                   block_q: int = 128, block_k: int = 128,
-                   interpret: bool = True) -> jnp.ndarray:
-    """q,k: (B,H,S,Dqk); v: (B,H,S,Dv); rab: (H, 2*max_rel_pos+1) or None.
+def _bwd_dq_kernel(len_ref, cnt_ref,
+                   q_ref, k_ref, v_ref, rab_ref, do_ref,
+                   dq_ref, drab_ref, *, n_hist: int, scale_len: int,
+                   n_heads: int, bq: int, bk: int, max_rel: int,
+                   use_rab: bool):
+    """dq (accumulated over k blocks) and the per-(b,h) rab-table gradient
+    (accumulated over the whole q x k sub-grid via diagonal reduction)."""
+    bh = pl.program_id(0)
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    b = bh // n_heads
 
-    Returns (B,H,S,Dv). ``interpret=True`` executes on CPU (validation);
-    on TPU pass interpret=False.
-    """
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    scores, mask, rows, cols = _block_scores_and_mask(
+        len_ref, cnt_ref, q, k, rab_ref, b=b, qi=qi, ki=ki, n_hist=n_hist,
+        bq=bq, bk=bk, max_rel=max_rel, use_rab=use_rab)
+
+    do = do_ref[0].astype(jnp.float32)                   # (bq, dv)
+    v = v_ref[0].astype(jnp.float32)                     # (bk, dv)
+    da = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (bq, bk)
+    ds = da * (1.0 / scale_len) * _silu_grad(scores)
+    ds = jnp.where(mask, ds, 0.0)                        # dL/d(scores+bias)
+
+    dq_part = jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    dq_part = dq_part * (1.0 / math.sqrt(q.shape[-1]))
+
+    @pl.when(ki == 0)
+    def _init_dq():
+        dq_ref[0] = jnp.zeros_like(dq_ref[0])
+
+    dq_ref[0] += dq_part.astype(dq_ref.dtype)
+
+    @pl.when((qi == 0) & (ki == 0))
+    def _init_drab():
+        drab_ref[0] = jnp.zeros_like(drab_ref[0])
+
+    if use_rab:
+        # drab[t] = sum of ds over cells with clip(row-col) == t-max_rel.
+        # Each (bq, bk) tile holds bq+bk-1 diagonals of constant delta;
+        # reduce each diagonal and scatter into the compact table.
+        # PERF: this is a sequential VPU loop (bq+bk-1 masked whole-tile
+        # sums). If the rab-on backward ever dominates on TPU, batch G
+        # diagonals per step as a (bq*bk, G) one-hot dot_general so the
+        # reduction runs on the MXU (G bounded by VMEM, e.g. 32).
+        base = qi * bq - ki * bk
+        rel = rows - cols
+
+        def _diag(u, _):
+            d_global = base + (u - (bk - 1))
+            dsum = jnp.sum(jnp.where(rel == d_global, ds, 0.0))
+            t = jnp.clip(d_global, -max_rel, max_rel) + max_rel
+            idx = (pl.ds(0, 1), pl.ds(t, 1))
+            pl.store(drab_ref, idx, pl.load(drab_ref, idx) +
+                     dsum.reshape(1, 1))
+            return 0
+
+        jax.lax.fori_loop(0, bq + bk - 1, _diag, 0)
+
+
+def _bwd_dkv_kernel(len_ref, cnt_ref,
+                    q_ref, k_ref, v_ref, rab_ref, do_ref,
+                    dk_ref, dv_ref, *, n_hist: int, scale_len: int,
+                    n_heads: int, bq: int, bk: int, max_rel: int,
+                    use_rab: bool):
+    """dk and dv, both accumulated over q blocks (grid: q innermost)."""
+    bh = pl.program_id(0)
+    ki = pl.program_id(1)
+    qi = pl.program_id(2)
+    b = bh // n_heads
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    scores, mask, _, _ = _block_scores_and_mask(
+        len_ref, cnt_ref, q, k, rab_ref, b=b, qi=qi, ki=ki, n_hist=n_hist,
+        bq=bq, bk=bk, max_rel=max_rel, use_rab=use_rab)
+
+    do = do_ref[0].astype(jnp.float32)                   # (bq, dv)
+    v = v_ref[0].astype(jnp.float32)                     # (bk, dv)
+
+    a = jax.nn.silu(scores) * (1.0 / scale_len)
+    a = jnp.where(mask, a, 0.0)
+    dv_part = jax.lax.dot_general(a, do, (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    da = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (bq, bk)
+    ds = da * (1.0 / scale_len) * _silu_grad(scores)
+    ds = jnp.where(mask, ds, 0.0)
+    dk_part = jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    dk_part = dk_part * (1.0 / math.sqrt(q.shape[-1]))
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_ref[0] = jnp.zeros_like(dk_ref[0])
+        dv_ref[0] = jnp.zeros_like(dv_ref[0])
+
+    dk_ref[0] += dk_part.astype(dk_ref.dtype)
+    dv_ref[0] += dv_part.astype(dv_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call plumbing on block-aligned shapes (wrapped in custom_vjp)
+# ---------------------------------------------------------------------------
+
+# statics = (n_hist, scale_len, max_rel, bq, bk, use_rab, interpret)
+
+
+def _flatten(q, k, v, rab):
     b, h, s, dqk = q.shape
     dv = v.shape[-1]
-    bq = min(block_q, s)
-    bk = min(block_k, s)
-    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
-    use_rab = rab is not None
-    if rab is None:
-        rab = jnp.zeros((h, 2 * max_rel_pos + 1), q.dtype)
-
     qf = q.reshape(b * h, s, dqk)
     kf = k.reshape(b * h, s, dqk)
     vf = v.reshape(b * h, s, dv)
     rabf = jnp.broadcast_to(rab[None], (b, h, rab.shape[-1])).reshape(
         b * h, rab.shape[-1])
+    return qf, kf, vf, rabf
+
+
+def _fwd_call(statics, hist_lengths, target_counts, q, k, v, rab):
+    n_hist, scale_len, max_rel, bq, bk, use_rab, interpret = statics
+    b, h, s, dqk = q.shape
+    dv = v.shape[-1]
+    qf, kf, vf, rabf = _flatten(q, k, v, rab)
+    nrab = rab.shape[-1]
 
     grid = (b * h, s // bq, s // bk)
     kernel = functools.partial(
-        _kernel, n_hist=n_hist, seq=s, n_heads=h, bq=bq, bk=bk,
-        max_rel=max_rel_pos, use_rab=use_rab)
+        _fwd_kernel, n_hist=n_hist, scale_len=scale_len, n_heads=h,
+        bq=bq, bk=bk, max_rel=max_rel, use_rab=use_rab)
 
     out = pl.pallas_call(
         kernel,
@@ -116,14 +248,137 @@ def hstu_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                 pl.BlockSpec((1, bq, dqk), lambda bh, qi, ki, *s: (bh, qi, 0)),
                 pl.BlockSpec((1, bk, dqk), lambda bh, qi, ki, *s: (bh, ki, 0)),
                 pl.BlockSpec((1, bk, dv), lambda bh, qi, ki, *s: (bh, ki, 0)),
-                pl.BlockSpec((1, rab.shape[-1]),
-                             lambda bh, qi, ki, *s: (bh, 0)),
+                pl.BlockSpec((1, nrab), lambda bh, qi, ki, *s: (bh, 0)),
             ],
             out_specs=pl.BlockSpec((1, bq, dv),
                                    lambda bh, qi, ki, *s: (bh, qi, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((b * h, s, dv), v.dtype),
         interpret=interpret,
-    )(hist_lengths.astype(jnp.int32), target_counts.astype(jnp.int32),
-      qf, kf, vf, rabf)
+    )(hist_lengths, target_counts, qf, kf, vf, rabf)
     return out.reshape(b, h, s, dv)
+
+
+def _bwd_call(statics, hist_lengths, target_counts, q, k, v, rab, g):
+    n_hist, scale_len, max_rel, bq, bk, use_rab, interpret = statics
+    b, h, s, dqk = q.shape
+    dv = v.shape[-1]
+    qf, kf, vf, rabf = _flatten(q, k, v, rab)
+    dof = g.reshape(b * h, s, dv)
+    nrab = rab.shape[-1]
+    kw = dict(n_hist=n_hist, scale_len=scale_len, n_heads=h, bq=bq, bk=bk,
+              max_rel=max_rel, use_rab=use_rab)
+
+    in_specs_q_inner = [  # grid (bh, qi, ki)
+        pl.BlockSpec((1, bq, dqk), lambda bh, qi, ki, *s: (bh, qi, 0)),
+        pl.BlockSpec((1, bk, dqk), lambda bh, qi, ki, *s: (bh, ki, 0)),
+        pl.BlockSpec((1, bk, dv), lambda bh, qi, ki, *s: (bh, ki, 0)),
+        pl.BlockSpec((1, nrab), lambda bh, qi, ki, *s: (bh, 0)),
+        pl.BlockSpec((1, bq, dv), lambda bh, qi, ki, *s: (bh, qi, 0)),
+    ]
+    dq_f, drab_f = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, **kw),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b * h, s // bq, s // bk),
+            in_specs=in_specs_q_inner,
+            out_specs=[
+                pl.BlockSpec((1, bq, dqk), lambda bh, qi, ki, *s: (bh, qi, 0)),
+                pl.BlockSpec((1, nrab), lambda bh, qi, ki, *s: (bh, 0)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, s, dqk), q.dtype),
+            jax.ShapeDtypeStruct((b * h, nrab), jnp.float32),
+        ],
+        interpret=interpret,
+    )(hist_lengths, target_counts, qf, kf, vf, rabf, dof)
+
+    in_specs_k_inner = [  # grid (bh, ki, qi)
+        pl.BlockSpec((1, bq, dqk), lambda bh, ki, qi, *s: (bh, qi, 0)),
+        pl.BlockSpec((1, bk, dqk), lambda bh, ki, qi, *s: (bh, ki, 0)),
+        pl.BlockSpec((1, bk, dv), lambda bh, ki, qi, *s: (bh, ki, 0)),
+        pl.BlockSpec((1, nrab), lambda bh, ki, qi, *s: (bh, 0)),
+        pl.BlockSpec((1, bq, dv), lambda bh, ki, qi, *s: (bh, qi, 0)),
+    ]
+    dk_f, dv_f = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, **kw),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b * h, s // bk, s // bq),
+            in_specs=in_specs_k_inner,
+            out_specs=[
+                pl.BlockSpec((1, bk, dqk), lambda bh, ki, qi, *s: (bh, ki, 0)),
+                pl.BlockSpec((1, bk, dv), lambda bh, ki, qi, *s: (bh, ki, 0)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, s, dqk), k.dtype),
+            jax.ShapeDtypeStruct((b * h, s, dv), v.dtype),
+        ],
+        interpret=interpret,
+    )(hist_lengths, target_counts, qf, kf, vf, rabf, dof)
+
+    dq = dq_f.reshape(b, h, s, dqk)
+    dk = dk_f.reshape(b, h, s, dqk)
+    dvv = dv_f.reshape(b, h, s, dv)
+    # rab is shared across the batch: reduce the per-(b,h) partials.
+    drab = drab_f.reshape(b, h, nrab).sum(0).astype(rab.dtype)
+    return dq, dk, dvv, drab
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _hstu_fused(statics, hist_lengths, target_counts, q, k, v, rab):
+    return _fwd_call(statics, hist_lengths, target_counts, q, k, v, rab)
+
+
+def _hstu_fused_fwd(statics, hist_lengths, target_counts, q, k, v, rab):
+    out = _fwd_call(statics, hist_lengths, target_counts, q, k, v, rab)
+    return out, (hist_lengths, target_counts, q, k, v, rab)
+
+
+def _hstu_fused_bwd(statics, res, g):
+    hist_lengths, target_counts, q, k, v, rab = res
+    dq, dk, dv, drab = _bwd_call(statics, hist_lengths, target_counts,
+                                 q, k, v, rab, g)
+    zero_hl = np.zeros(hist_lengths.shape, jax.dtypes.float0)
+    zero_tc = np.zeros(target_counts.shape, jax.dtypes.float0)
+    return zero_hl, zero_tc, dq, dk, dv, drab
+
+
+_hstu_fused.defvjp(_hstu_fused_fwd, _hstu_fused_bwd)
+
+
+def hstu_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   rab: Optional[jnp.ndarray],
+                   n_hist: int,
+                   hist_lengths: jnp.ndarray,
+                   target_counts: jnp.ndarray,
+                   max_rel_pos: int = 128,
+                   block_q: int = 128, block_k: int = 128,
+                   interpret: bool = True) -> jnp.ndarray:
+    """q,k: (B,H,S,Dqk); v: (B,H,S,Dv); rab: (H, 2*max_rel_pos+1) or None.
+
+    Returns (B,H,S,Dv). Differentiable w.r.t. q, k, v, and rab via the fused
+    backward kernels (``jax.custom_vjp``); scores are recomputed blockwise so
+    no O(S²) residual is stored. S need not divide the block size: the
+    wrapper pads to the block lattice and crops, with the 1/S scale pinned to
+    the unpadded length. ``interpret=True`` executes on CPU (validation); on
+    TPU pass interpret=False.
+    """
+    b, h, s, dqk = q.shape
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    lcm = bq * bk // math.gcd(bq, bk)
+    s_pad = -(-s // lcm) * lcm
+    use_rab = rab is not None
+    if rab is None:
+        rab = jnp.zeros((h, 2 * max_rel_pos + 1), q.dtype)
+    if s_pad != s:
+        # padded positions are out-of-range targets -> masked out in-kernel
+        pad = ((0, 0), (0, 0), (0, s_pad - s), (0, 0))
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    statics = (n_hist, s, max_rel_pos, bq, bk, use_rab, bool(interpret))
+    out = _hstu_fused(statics, hist_lengths.astype(jnp.int32),
+                      target_counts.astype(jnp.int32), q, k, v, rab)
+    return out[:, :, :s, :] if s_pad != s else out

@@ -1,8 +1,10 @@
 """jit'd public wrappers over the Pallas kernels with oracle fallback.
 
-``use_pallas``: "auto" (pallas in interpret mode off-TPU), "always",
-"never" (pure-jnp oracle — the default the distributed dry-run lowers, so
-SPMD partitioning sees plain XLA ops; kernels are validated separately).
+``use_pallas``: "always" (Pallas kernel — compiled on TPU, interpret mode
+elsewhere), "auto" (kernels/dispatch.py resolution: env/default knobs,
+else pallas on TPU and the chunked jnp path off-TPU), "never" (pure-jnp
+dense oracle — the default the distributed dry-run lowers, so SPMD
+partitioning sees plain XLA ops; kernels are validated separately).
 """
 from __future__ import annotations
 
@@ -12,10 +14,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.masks import MaskSpec
+from repro.kernels import dispatch as _dispatch
 from repro.kernels import ref as _ref
 from repro.kernels.dot_interaction import dot_interaction as _dot_pallas
 from repro.kernels.embedding_bag import embedding_bag as _bag_pallas
-from repro.kernels.hstu_attention import hstu_attention as _hstu_pallas
 
 
 def _on_tpu() -> bool:
@@ -26,11 +29,15 @@ def _on_tpu() -> bool:
 def hstu_attention(q, k, v, rab, hist_lengths, target_counts, *,
                    n_hist: int, max_rel_pos: int = 128,
                    use_pallas: str = "never"):
+    spec = MaskSpec(n_hist, hist_lengths, target_counts)
     if use_pallas == "never":
-        return _ref.hstu_attention_ref(q, k, v, rab, n_hist, hist_lengths,
-                                       target_counts, max_rel_pos)
-    return _hstu_pallas(q, k, v, rab, n_hist, hist_lengths, target_counts,
-                        max_rel_pos, interpret=not _on_tpu())
+        backend = "jnp-dense"
+    elif use_pallas == "always":
+        backend = "pallas" if _on_tpu() else "pallas-interpret"
+    else:                      # "auto": env/default/hardware resolution
+        backend = None
+    return _dispatch.hstu_attention(q, k, v, rab, spec, backend=backend,
+                                    max_rel_pos=max_rel_pos)
 
 
 @partial(jax.jit, static_argnames=("use_pallas",))

@@ -62,7 +62,15 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--b-ro", type=int, default=32)
     ap.add_argument("--b-nro", type=int, default=192)
+    ap.add_argument("--attn-backend", default=None,
+                    choices=("pallas", "pallas-interpret", "jnp-chunked",
+                             "jnp-dense"),
+                    help="HSTU attention backend (default: auto — fused "
+                         "Pallas kernel on TPU, chunked jnp elsewhere)")
     args = ap.parse_args()
+    if args.attn_backend:
+        from repro.kernels.dispatch import set_default_backend
+        set_default_backend(args.attn_backend)
     rng = jax.random.PRNGKey(0)
 
     from repro.train.loop import Trainer, TrainLoopConfig

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hstu import HSTUConfig, hstu_apply, hstu_init
-from repro.core.masks import history_mask
+from repro.core.masks import causal_spec
 from repro.core.roo_batch import ROOBatch
 from repro.core.sequence import (ROOSequenceConfig, encode_roo,
                                  gather_targets_to_ro, scatter_targets_to_nro)
@@ -89,8 +89,8 @@ def gr_retrieval_loss(params: Dict, cfg: GRConfig, batch: ROOBatch,
     in-batch candidate softmax — the GR retrieval objective."""
     hist = _embed_history(params, cfg, batch)
     lengths = jnp.minimum(batch.history_lengths, cfg.hist_len)
-    mask = history_mask(lengths, cfg.hist_len)
-    enc = hstu_apply(params["hstu"], cfg.hstu, hist, mask)   # (B_RO, n, d)
+    spec = causal_spec(lengths, cfg.hist_len)
+    enc = hstu_apply(params["hstu"], cfg.hstu, hist, spec)   # (B_RO, n, d)
     # position t predicts item t+1
     q = enc[:, :-1, :]
     nxt = batch.history_ids[:, 1:cfg.hist_len]

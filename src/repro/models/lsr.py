@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro.core.fanout import fanout
 from repro.core.hstu import HSTUConfig, hstu_apply, hstu_init
 from repro.core.lce import LCEConfig, lce_apply, lce_init
-from repro.core.masks import history_mask
+from repro.core.masks import causal_spec
 from repro.core.roo_batch import ROOBatch
 from repro.core.sequence import (ROOSequenceConfig, encode_roo,
                                  gather_targets_to_ro, roo_sequence_init,
@@ -51,12 +51,14 @@ class LSRConfig:
     top_mlp: Tuple[int, ...] = (512, 256,)
     n_tasks: int = 2
     hstu: Optional[HSTUConfig] = None
+    attn_backend: Optional[str] = None   # kernels/dispatch.py backend knob
 
 
 def _hstu_cfg(cfg: LSRConfig) -> HSTUConfig:
     return cfg.hstu or HSTUConfig(d_model=cfg.embed_dim, n_heads=2,
                                   d_qk=32, d_v=32, n_layers=2,
-                                  max_rel_pos=cfg.hist_len)
+                                  max_rel_pos=cfg.hist_len,
+                                  attn_backend=cfg.attn_backend)
 
 
 def lsr_init(rng: jax.Array, cfg: LSRConfig, dtype=jnp.float32) -> Dict:
@@ -114,8 +116,8 @@ def _user_side(params: Dict, cfg: LSRConfig, batch: ROOBatch,
                             axis=0)
         act = jnp.take(params["act_emb"], jnp.clip(batch.history_actions, 0, 3),
                        axis=0)
-        mask = history_mask(batch.history_lengths, cfg.hist_len)
-        enc = hstu_apply(params["hstu"], _hstu_cfg(cfg), hist_emb + act, mask)
+        spec = causal_spec(batch.history_lengths, cfg.hist_len)
+        enc = hstu_apply(params["hstu"], _hstu_cfg(cfg), hist_emb + act, spec)
         valid = (jnp.arange(cfg.hist_len)[None] < batch.history_lengths[:, None])
         hist = jnp.sum(enc * valid[..., None], 1) / jnp.maximum(
             batch.history_lengths, 1).astype(enc.dtype)[:, None]

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.core.fanout import fanout
 from repro.core.hstu import HSTUConfig, hstu_apply, hstu_init
-from repro.core.masks import history_mask
+from repro.core.masks import causal_spec
 from repro.core.roo_batch import ROOBatch
 from repro.embeddings.bag import bag_lookup, bag_lookup_dense
 from repro.models.mlp import mlp_apply, mlp_init
@@ -71,8 +71,8 @@ def user_tower(params: Dict, cfg: TwoTowerConfig, batch: ROOBatch) -> jnp.ndarra
         act_emb = jnp.take(params["act_emb"],
                            jnp.clip(batch.history_actions, 0, 3), axis=0)
         seq = hist_emb + act_emb
-        mask = history_mask(batch.history_lengths, cfg.hist_len)
-        enc = hstu_apply(params["hstu"], cfg.hstu, seq, mask)
+        spec = causal_spec(batch.history_lengths, cfg.hist_len)
+        enc = hstu_apply(params["hstu"], cfg.hstu, seq, spec)
         # mean-pool valid positions as the user interest summary
         valid = (jnp.arange(cfg.hist_len)[None] < batch.history_lengths[:, None])
         pooled = jnp.sum(enc * valid[..., None], 1) / jnp.maximum(

@@ -31,12 +31,18 @@ class ServeConfig:
     b_ro: int = 64
     b_nro: int = 512
     hist_len: int = 64
+    # HSTU attention backend for inference (kernels/dispatch.py); None =
+    # auto (fused Pallas kernel on TPU, chunked jnp elsewhere).
+    attn_backend: Optional[str] = None
 
 
 class ROOServer:
     """Batched request server around a jit'd scoring function.
 
     score_fn(params, batch) -> (B_NRO,) or (B_NRO, n_tasks) scores.
+    ``cfg.attn_backend`` pins the HSTU attention backend for serving — the
+    backend is resolved when the scoring function first traces, so the same
+    fused kernel used in training serves inference traffic.
     """
 
     def __init__(self, params, score_fn: Callable, cfg: ServeConfig):
@@ -48,14 +54,16 @@ class ROOServer:
 
     def score_requests(self, requests: List[ROOSample]) -> List[np.ndarray]:
         """Returns per-request score arrays aligned with request.item_ids."""
+        from repro.kernels.dispatch import use_backend
         out: List[np.ndarray] = []
-        for batch in self._batcher.batches(requests):
-            scores = np.asarray(self._score(self.params, batch))
-            seg = np.asarray(batch.segment_ids)
-            for r in range(batch.b_ro):
-                sel = scores[seg == r]
-                if len(sel):
-                    out.append(sel)
+        with use_backend(self.cfg.attn_backend):
+            for batch in self._batcher.batches(requests):
+                scores = np.asarray(self._score(self.params, batch))
+                seg = np.asarray(batch.segment_ids)
+                for r in range(batch.b_ro):
+                    sel = scores[seg == r]
+                    if len(sel):
+                        out.append(sel)
         return out[:len(requests)]
 
 

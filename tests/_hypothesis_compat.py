@@ -1,0 +1,27 @@
+"""Import hypothesis if available, else provide stubs that skip the
+property tests — so tier-1 collection works without requirements-dev.txt
+being installed (``pip install -r requirements-dev.txt`` enables them)."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                  # graceful degradation
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        return lambda fn: pytest.mark.skip(
+            reason="hypothesis not installed (pip install -r "
+                   "requirements-dev.txt)")(fn)
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        """st.integers(...) etc. return inert placeholders; the @given
+        stub skips the test before they are ever drawn from."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.data.jagged import JaggedTensor, KeyedJagged
 from repro.embeddings.bag import bag_lookup, bag_lookup_dense

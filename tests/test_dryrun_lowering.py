@@ -30,9 +30,13 @@ for arch, shape in cells:
             cell.abstract_state(), cell.input_specs()).compile()
     a = analyze(c.as_text())
     m = c.memory_analysis()
+    peak = getattr(m, "peak_memory_in_bytes", None)
+    if peak is None:  # older jax: no peak stat; sum the live buffer classes
+        peak = (m.temp_size_in_bytes + m.argument_size_in_bytes
+                + m.output_size_in_bytes)
     out[f"{arch}/{shape}"] = {
         "flops": a["flops"], "coll": a["collective_bytes"],
-        "mem": a["memory_bytes"], "peak": m.peak_memory_in_bytes}
+        "mem": a["memory_bytes"], "peak": peak}
 print("RESULT=" + json.dumps(out))
 '''
 

@@ -32,7 +32,11 @@ class TestHLOAnalysis:
         expect = n_layers * 2 * 128 * 256 * 256
         assert a["flops"] == pytest.approx(expect, rel=0.01)
         # XLA's own analysis counts the body once — the bug we correct
-        assert c.cost_analysis()["flops"] < expect / (n_layers / 1.5)
+        # (cost_analysis returns a per-device list on older jax)
+        ca = c.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        assert ca["flops"] < expect / (n_layers / 1.5)
 
     def test_scan_equals_unrolled(self):
         """Weighted scan accounting == fully unrolled program accounting."""
