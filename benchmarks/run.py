@@ -8,9 +8,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
   seq_amortization_*       — §3.3 encoder amortization (9.82x example)
   roofline_*               — §Roofline terms per (arch x shape) from dry-run
   hstu_kernel_*            — HSTU attention fwd/bwd per dispatch backend
+  serving_*                — serving engine QPS/p50/p99 per regime,
+                             user-tower cache on vs off (docs/SERVING.md)
 
-``--smoke`` runs only the fast kernel micro-benchmark at reduced scale —
-the tier-1 perf gate wired into scripts/check.sh.
+``--smoke`` runs the fast kernel micro-benchmark and the serving benchmark
+at reduced scale — the tier-1 perf gate wired into scripts/check.sh.
 """
 import sys
 
@@ -18,8 +20,9 @@ import sys
 def main() -> None:
     smoke = "--smoke" in sys.argv[1:]
     print("name,us_per_call,derived")
-    from benchmarks import hstu_kernel
+    from benchmarks import hstu_kernel, serving
     hstu_kernel.run(smoke=smoke)
+    serving.run(smoke=smoke)
     if smoke:
         return
     from benchmarks import (join_quality, retrieval_flops, roofline,

@@ -1,0 +1,140 @@
+"""Serving benchmark — QPS + p50/p99 across the three serving regimes of
+the assigned shapes, user-tower cache on vs off.
+
+  serving_p99_*        — online waves through the micro-batching engine
+                         (per-wave latency p50/p99, request QPS);
+  serving_bulk_*       — offline scoring via the streaming API (impression
+                         throughput; repeat traffic so the user-tower cache
+                         can dedupe the RO side — paper §2.2 at inference);
+  serving_retrieval    — 1 user vs N candidates, one matvec + top-k.
+
+``--smoke`` (via benchmarks/run.py) runs every regime at reduced scale; the
+full run sizes bulk toward the paper's 262 144-impression regime (scaled to
+what a CPU host finishes in minutes — the code path is identical).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, make_dataset
+from repro.configs import roo_models as rm
+from repro.models.lsr import (lsr_init, lsr_logits_from_user, lsr_logits_roo,
+                              lsr_user_repr)
+from repro.models.two_tower import two_tower_init, user_tower
+from repro.serve.serving import ROOServer, ServeConfig, retrieval_scoring
+
+
+def _pcts(lat_ms: List[float]):
+    a = np.asarray(sorted(lat_ms))
+    return (float(np.percentile(a, 50)), float(np.percentile(a, 99)))
+
+
+def _lsr_fns(cfg):
+    return (lambda p, b: lsr_logits_roo(p, cfg, b)[:, 0],
+            lambda p, b: lsr_user_repr(p, cfg, b),
+            lambda p, b, u: lsr_logits_from_user(p, cfg, b, u)[:, 0])
+
+
+def _serve_p99(params, cfg, requests, smoke: bool) -> None:
+    score_fn, _, _ = _lsr_fns(cfg)
+    server = ROOServer(params, score_fn, ServeConfig(b_ro=16, b_nro=128))
+    wave, n_waves = 8, (10 if smoke else 60)
+    # warm every ladder rung a real wave can land on, so the timed loop
+    # measures steady-state latency, not first-hit jit compiles
+    by_size = sorted(requests, key=lambda r: r.num_impressions)
+    server.score_requests(by_size[:wave])
+    server.score_requests(by_size[-wave:])
+    waves = [requests[(i * wave) % (len(requests) - wave):][:wave]
+             for i in range(n_waves)]
+    lat = []
+    for w in waves:
+        t0 = time.perf_counter()
+        server.score_requests(w)
+        lat.append((time.perf_counter() - t0) * 1e3)
+    p50, p99 = _pcts(lat)
+    qps = wave / (np.mean(lat) / 1e3)
+    emit("serving_p99", np.mean(lat) * 1e3,
+         f"qps={qps:.0f};p50_ms={p50:.1f};p99_ms={p99:.1f};"
+         f"buckets={server.stats.buckets.distinct_shapes}")
+
+
+def _serve_bulk(params, cfg, requests, smoke: bool) -> None:
+    score_fn, user_fn, from_user_fn = _lsr_fns(cfg)
+    # repeat traffic: the same users re-scored against candidate waves —
+    # the regime where the RO side is redundant across requests
+    target_imps = 1024 if smoke else 32768     # paper regime: 262144
+    traffic: List = []
+    n_imps = 0
+    while n_imps < target_imps:
+        for r in requests:
+            traffic.append(r)
+            n_imps += r.num_impressions
+            if n_imps >= target_imps:
+                break
+
+    def run_once(server):
+        checksum, n = 0.0, 0
+        t0 = time.perf_counter()
+        # streaming: one flush-group of scores host-side at a time
+        for _, scores in server.score_requests_iter(traffic):
+            checksum += float(scores.sum())
+            n += scores.shape[0]
+        return time.perf_counter() - t0, n, checksum
+
+    off = ROOServer(params, score_fn, ServeConfig(b_ro=32, b_nro=256))
+    on = ROOServer(params, score_fn,
+                   ServeConfig(b_ro=32, b_nro=256, cache_user_tower=True),
+                   user_fn=user_fn, score_from_user=from_user_fn)
+    run_once(off)                                  # warm jit for both
+    run_once(on)                                   # ... and the cache
+    t_off, n, cs_off = run_once(off)
+    t_on, _, cs_on = run_once(on)
+    assert abs(cs_off - cs_on) < 1e-2 * max(1.0, abs(cs_off)), \
+        "cache changed the scores"
+    emit("serving_bulk_cache_off", t_off * 1e6,
+         f"imps_per_s={n / t_off:.0f};n_impressions={n}")
+    emit("serving_bulk_cache_on", t_on * 1e6,
+         f"imps_per_s={n / t_on:.0f};speedup_x={t_off / t_on:.2f};"
+         f"hit_rate={on.cache.stats.hit_rate:.2f};"
+         f"full_cache_batches={on.stats.n_full_cache_batches}")
+
+
+def _serve_retrieval(rng, requests, smoke: bool) -> None:
+    tt = rm.retrieval_config()
+    tparams = two_tower_init(rng, tt)
+    from repro.data.batcher import BatcherConfig, ROOBatcher
+    batch = next(ROOBatcher(BatcherConfig(
+        b_ro=16, b_nro=128, hist_len=64)).batches(requests))
+    u = user_tower(tparams, tt, batch)[0]
+    n_cand = 65536 if smoke else 1_000_000
+    cand = jax.random.normal(rng, (n_cand, u.shape[-1])) * 0.1
+    fn = jax.jit(lambda uu, cc: retrieval_scoring(uu, cc, k=100))
+    jax.block_until_ready(fn(u, cand))             # compile
+    lat = []
+    for _ in range(10 if smoke else 50):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(u, cand))
+        lat.append((time.perf_counter() - t0) * 1e3)
+    p50, p99 = _pcts(lat)
+    emit("serving_retrieval", np.mean(lat) * 1e3,
+         f"n_candidates={n_cand};p50_ms={p50:.2f};p99_ms={p99:.2f};"
+         f"qps={1e3 / np.mean(lat):.0f}")
+
+
+def run(smoke: bool = False) -> None:
+    rng = jax.random.PRNGKey(0)
+    cfg = rm.lsr_config("userarch_hstu")
+    params = lsr_init(rng, cfg)
+    roo, _ = make_dataset(n_requests=(60 if smoke else 300),
+                          product="product_b")
+    _serve_p99(params, cfg, roo, smoke)
+    _serve_bulk(params, cfg, roo, smoke)
+    _serve_retrieval(rng, roo, smoke)
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in __import__("sys").argv[1:])

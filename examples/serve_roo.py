@@ -1,18 +1,27 @@
-"""ROO inference (paper §2.2): serve batched requests with the unified
-training/inference format + 1-vs-1M retrieval scoring.
+"""ROO inference (paper §2.2): the request-centric serving engine.
+
+Demonstrates the full serving path:
+  * request-aligned scoring — one score array per request, exactly aligned
+    with ``request.item_ids`` (zero-impression and oversize requests
+    included);
+  * the online micro-batcher (submit / poll / take with a size-or-deadline
+    admission policy) and shape-bucketed batching;
+  * the user-tower cache deduping the RO side across repeat requests;
+  * 1-vs-1M retrieval scoring.
 
 Run:  PYTHONPATH=src python examples/serve_roo.py
 """
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import roo_models as rm
 from repro.core.joiner import RequestLevelJoiner
+from repro.data.batcher import BatcherConfig, ROOBatcher
 from repro.data.events import EventSimulator, EventStreamConfig
-from repro.models.lsr import lsr_init, lsr_logits_roo
+from repro.models.lsr import (lsr_init, lsr_logits_from_user, lsr_logits_roo,
+                              lsr_user_repr)
 from repro.models.two_tower import two_tower_init, user_tower
 from repro.serve.serving import ROOServer, ServeConfig, retrieval_scoring
 
@@ -23,8 +32,11 @@ def main():
     # --- late-stage ranking serving: batched ROO requests --------------------
     cfg = rm.lsr_config("userarch_hstu")
     params = lsr_init(rng, cfg)
-    server = ROOServer(params, lambda p, b: lsr_logits_roo(p, cfg, b)[:, 0],
-                       ServeConfig(b_ro=32, b_nro=192))
+    server = ROOServer(
+        params, lambda p, b: lsr_logits_roo(p, cfg, b)[:, 0],
+        ServeConfig(b_ro=32, b_nro=192, cache_user_tower=True),
+        user_fn=lambda p, b: lsr_user_repr(p, cfg, b),
+        score_from_user=lambda p, b, u: lsr_logits_from_user(p, cfg, b, u)[:, 0])
 
     # incoming requests = ROO samples without labels (same schema!)
     events = list(EventSimulator(EventStreamConfig(
@@ -33,15 +45,36 @@ def main():
     t0 = time.time()
     scores = server.score_requests(requests)
     dt = (time.time() - t0) * 1e3
+    assert len(scores) == len(requests)
+    assert all(s.shape == (r.num_impressions,)
+               for r, s in zip(requests, scores))
     n_cand = sum(len(s) for s in scores)
-    print(f"scored {len(scores)} requests / {n_cand} candidates "
-          f"in {dt:.1f} ms (user side computed ONCE per request)")
+    print(f"scored {len(scores)} requests / {n_cand} candidates in {dt:.1f} ms "
+          f"(aligned 1:1 with item_ids; user side computed ONCE per request)")
     print(f"request 0: {np.round(scores[0], 3)}")
+    print(f"bucket shapes used: {sorted(server.stats.buckets.counts)}")
+
+    # repeat traffic: the RO side is served from the user-tower cache
+    t0 = time.time()
+    scores2 = server.score_requests(requests)
+    dt2 = (time.time() - t0) * 1e3
+    np.testing.assert_allclose(scores2[0], scores[0], rtol=1e-5, atol=1e-5)
+    print(f"repeat pass: {dt2:.1f} ms — cache hit rate "
+          f"{server.cache.stats.hit_rate:.0%}, "
+          f"{server.stats.n_full_cache_batches} batch(es) skipped the user tower")
+
+    # --- online micro-batching: submit / poll / take --------------------------
+    eng = server.engine
+    tickets = [eng.submit(r) for r in requests[:5]]
+    eng.poll()                   # under size + deadline: nothing scored yet
+    eng.flush()                  # e.g. shutdown / test hook forces the flush
+    online = [eng.take(t) for t in tickets]
+    print(f"online path: {len(online)} requests scored in one micro-batch "
+          f"({sum(len(s) for s in online)} candidates)")
 
     # --- retrieval serving: 1 user vs 1M candidates --------------------------
     tt = rm.retrieval_config()
     tparams = two_tower_init(rng, tt)
-    from repro.data.batcher import BatcherConfig, ROOBatcher
     batch = next(ROOBatcher(BatcherConfig(b_ro=32, b_nro=192,
                                           hist_len=64)).batches(requests))
     u = user_tower(tparams, tt, batch)[0]                     # (d,)

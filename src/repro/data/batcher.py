@@ -8,13 +8,20 @@ Packs a list of ROOSamples into fixed-shape ``ROOBatch`` pytrees:
     depends on);
   * ``segment_ids`` can be emitted global (default) or shard-local.
 
+Packing metadata: ``batches_with_plan`` additionally yields a ``BatchPlan``
+mapping every input request to its (row, slot range) in the packed batch —
+the structure serving needs to return scores exactly aligned with each
+request's ``item_ids`` — and counts impressions dropped by truncation so
+training-data loss is observable instead of silent.
+
 Also provides the impression-level packing used by baseline (non-ROO)
 training and by the ROO-expansion backward-compat adapter.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List, Optional, Sequence
+import warnings
+from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -35,6 +42,56 @@ class BatcherConfig:
     n_shards: int = 1              # data shards; leading dims divisible by it
     local_segment_ids: bool = False
     label_keys: Sequence[str] = ("click", "view_sec")
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedRequest:
+    """Where one input request landed inside a packed ROOBatch.
+
+    A request's impressions always occupy *contiguous* NRO slots
+    (``slot_start .. slot_start + n_packed``), so per-request scores are a
+    plain slice of the batch-level score array.
+    """
+    request_index: int        # index into the samples passed to batches()
+    row: int                  # RO row in the batch
+    slot_start: int           # first NRO slot
+    n_packed: int             # impressions packed into this batch
+    n_total: int              # the request's total impressions
+
+    @property
+    def n_dropped(self) -> int:
+        return self.n_total - self.n_packed
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPlan:
+    """Request -> slot mapping for one packed batch (same order as packing)."""
+    requests: Tuple[PackedRequest, ...]
+
+    @property
+    def dropped_impressions(self) -> int:
+        return sum(p.n_dropped for p in self.requests)
+
+    @property
+    def truncated_requests(self) -> int:
+        return sum(1 for p in self.requests if p.n_dropped > 0)
+
+
+@dataclasses.dataclass
+class BatcherStats:
+    """Accumulated over one ``batches``/``batches_with_plan`` call."""
+    n_batches: int = 0
+    n_requests: int = 0
+    n_impressions_packed: int = 0
+    n_impressions_dropped: int = 0
+    n_requests_truncated: int = 0
+
+    def update(self, plan: BatchPlan) -> None:
+        self.n_batches += 1
+        self.n_requests += len(plan.requests)
+        self.n_impressions_packed += sum(p.n_packed for p in plan.requests)
+        self.n_impressions_dropped += plan.dropped_impressions
+        self.n_requests_truncated += plan.truncated_requests
 
 
 def _pad2d(rows: List[np.ndarray], n: int, width: int, dtype=np.float32):
@@ -62,37 +119,52 @@ class ROOBatcher:
     def __init__(self, cfg: BatcherConfig):
         assert cfg.b_ro % cfg.n_shards == 0 and cfg.b_nro % cfg.n_shards == 0
         self.cfg = cfg
+        self.stats = BatcherStats()   # accumulated over the most recent call
 
     def batches(self, samples: Sequence[ROOSample]) -> Iterator[ROOBatch]:
+        for batch, _ in self.batches_with_plan(samples):
+            yield batch
+
+    def batches_with_plan(
+            self, samples: Sequence[ROOSample],
+    ) -> Iterator[Tuple[ROOBatch, BatchPlan]]:
+        """Yield (batch, plan); the plan maps every admitted request to its
+        (row, slot range) and records impressions dropped by truncation."""
         cfg = self.cfg
         per_shard_ro = cfg.b_ro // cfg.n_shards
         per_shard_nro = cfg.b_nro // cfg.n_shards
-        queue = list(samples)
+        queue = list(enumerate(samples))
+        self.stats = BatcherStats()
         while queue:
-            shard_reqs: List[List[ROOSample]] = [[] for _ in range(cfg.n_shards)]
+            # entries: (request_index, sample, n_total_impressions)
+            shard_reqs: List[List[Tuple[int, ROOSample, int]]] = [
+                [] for _ in range(cfg.n_shards)]
             shard_imps = [0] * cfg.n_shards
-            progress = False
             for shard in range(cfg.n_shards):
                 while queue and len(shard_reqs[shard]) < per_shard_ro:
-                    s = queue[0]
+                    idx, s = queue[0]
+                    # clamped to the shard quota, so an over-size request is
+                    # always admitted into an empty shard (and truncated by
+                    # _pack, which the plan records)
                     n_imp = min(s.num_impressions, per_shard_nro)
                     if shard_imps[shard] + n_imp > per_shard_nro:
                         break
                     queue.pop(0)
-                    shard_reqs[shard].append(s)
+                    shard_reqs[shard].append((idx, s, s.num_impressions))
                     shard_imps[shard] += n_imp
-                    progress = True
-            if not progress:      # a single over-size request: truncate it
-                s = queue.pop(0)
-                s = dataclasses.replace(
-                    s, item_ids=s.item_ids[:per_shard_nro],
-                    item_dense=s.item_dense[:per_shard_nro],
-                    item_idlist=s.item_idlist[:per_shard_nro],
-                    labels=s.labels[:per_shard_nro])
-                shard_reqs[0].append(s)
-            yield self._pack(shard_reqs)
+            batch, plan = self._pack(shard_reqs)
+            self.stats.update(plan)
+            if plan.dropped_impressions:
+                warnings.warn(
+                    f"ROOBatcher: dropped {plan.dropped_impressions} "
+                    f"impression(s) from {plan.truncated_requests} truncated "
+                    f"request(s) — b_nro={cfg.b_nro} (per-shard "
+                    f"{per_shard_nro}) is smaller than the request",
+                    stacklevel=2)
+            yield batch, plan
 
-    def _pack(self, shard_reqs: List[List[ROOSample]]) -> ROOBatch:
+    def _pack(self, shard_reqs: List[List[Tuple[int, ROOSample, int]]]
+              ) -> Tuple[ROOBatch, BatchPlan]:
         cfg = self.cfg
         per_shard_ro = cfg.b_ro // cfg.n_shards
         per_shard_nro = cfg.b_nro // cfg.n_shards
@@ -106,8 +178,9 @@ class ROOBatcher:
         labels = np.zeros((cfg.b_nro, len(cfg.label_keys)), np.float32)
 
         nro_fill = [0] * cfg.n_shards
+        packed: List[PackedRequest] = []
         for shard, reqs in enumerate(shard_reqs):
-            for j, s in enumerate(reqs):
+            for j, (idx, s, n_total) in enumerate(reqs):
                 row = shard * per_shard_ro + j
                 ro_dense_rows.append((row, s.ro_dense))
                 ro_idlists.append((row, s.ro_idlist))
@@ -115,6 +188,10 @@ class ROOBatcher:
                 acts.append((row, s.history_actions))
                 n = min(s.num_impressions, per_shard_nro - nro_fill[shard])
                 num_imp[row] = n
+                packed.append(PackedRequest(
+                    request_index=idx, row=row,
+                    slot_start=shard * per_shard_nro + nro_fill[shard],
+                    n_packed=n, n_total=n_total))
                 for k in range(n):
                     slot = shard * per_shard_nro + nro_fill[shard]
                     nro_fill[shard] += 1
@@ -159,7 +236,7 @@ class ROOBatcher:
         nro_sparse = KeyedJagged({"item_cats": JaggedTensor.from_lists(
             nro_idlist_rows, cfg.item_idlist_capacity)})
 
-        return ROOBatch(
+        batch = ROOBatch(
             ro_dense=jnp.asarray(ro_dense),
             ro_sparse=ro_sparse,
             history_ids=jnp.asarray(history_ids),
@@ -172,6 +249,7 @@ class ROOBatcher:
             num_impressions=jnp.asarray(num_imp),
             segment_ids=jnp.asarray(seg),
         )
+        return batch, BatchPlan(requests=tuple(packed))
 
 
 def impression_batches(samples: Sequence[ImpressionSample], batch_size: int,

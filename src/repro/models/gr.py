@@ -59,10 +59,18 @@ def _embed_history(params: Dict, cfg: GRConfig, batch: ROOBatch) -> jnp.ndarray:
     return e + a
 
 
-def gr_ranking_logits(params: Dict, cfg: GRConfig, batch: ROOBatch) -> jnp.ndarray:
-    """ROO ranking: encode [history | m targets] once per request;
-    (B_NRO, n_tasks) logits."""
-    hist = _embed_history(params, cfg, batch)
+def gr_history_repr(params: Dict, cfg: GRConfig, batch: ROOBatch) -> jnp.ndarray:
+    """Request-only half of GR ranking: embedded (item+action) history,
+    (B_RO, hist_len, d). The HSTU encode itself consumes the request's
+    targets (ROO mask), so the embedding stage is the cacheable RO part."""
+    return _embed_history(params, cfg, batch)
+
+
+def gr_ranking_logits_from_history(params: Dict, cfg: GRConfig,
+                                   batch: ROOBatch,
+                                   hist: jnp.ndarray) -> jnp.ndarray:
+    """GR ranking logits given a precomputed history embedding
+    (from ``gr_history_repr`` or a serving cache)."""
     lengths = jnp.minimum(batch.history_lengths, cfg.hist_len)
     tgt_nro = jnp.take(params["item_emb"],
                        jnp.clip(batch.item_ids, 0, cfg.n_items - 1), axis=0)
@@ -71,6 +79,13 @@ def gr_ranking_logits(params: Dict, cfg: GRConfig, batch: ROOBatch) -> jnp.ndarr
                      tgt_ro, batch.num_impressions)          # (B_RO, m, d)
     feats = scatter_targets_to_nro(enc, batch, cfg.m_targets)
     return mlp_apply(params["task_head"], feats)
+
+
+def gr_ranking_logits(params: Dict, cfg: GRConfig, batch: ROOBatch) -> jnp.ndarray:
+    """ROO ranking: encode [history | m targets] once per request;
+    (B_NRO, n_tasks) logits."""
+    return gr_ranking_logits_from_history(
+        params, cfg, batch, gr_history_repr(params, cfg, batch))
 
 
 def gr_ranking_loss(params: Dict, cfg: GRConfig, batch: ROOBatch) -> jnp.ndarray:

@@ -138,9 +138,19 @@ def _item_side(params: Dict, cfg: LSRConfig, batch: ROOBatch) -> jnp.ndarray:
     return jnp.concatenate([emb, dense], axis=-1)                    # (B_NRO,2d)
 
 
-def lsr_logits_roo(params: Dict, cfg: LSRConfig, batch: ROOBatch) -> jnp.ndarray:
-    """(B_NRO, n_tasks) multi-task logits, ROO path."""
-    user = _user_side(params, cfg, batch)
+def lsr_user_repr(params: Dict, cfg: LSRConfig, batch: ROOBatch) -> jnp.ndarray:
+    """Request-only half of the LSR forward: (B_RO, user_width).
+
+    Split out so serving can run it independently (once per unique request)
+    and memoize the result across repeat candidates (serve/user_cache.py).
+    """
+    return _user_side(params, cfg, batch)
+
+
+def lsr_logits_from_user(params: Dict, cfg: LSRConfig, batch: ROOBatch,
+                         user: jnp.ndarray) -> jnp.ndarray:
+    """NRO half of the LSR forward, given a precomputed (B_RO, user_width)
+    RO representation (from ``lsr_user_repr`` or a serving cache)."""
     user_at_nro = fanout(user, batch.segment_ids)
     item = _item_side(params, cfg, batch)
     if cfg.mode == "hstu_ranking":
@@ -161,6 +171,12 @@ def lsr_logits_roo(params: Dict, cfg: LSRConfig, batch: ROOBatch) -> jnp.ndarray
     x = jnp.concatenate([user_at_nro, item], axis=-1)
     x = dcnv2_apply(params["cross"], x)
     return mlp_apply(params["top_mlp"], x)
+
+
+def lsr_logits_roo(params: Dict, cfg: LSRConfig, batch: ROOBatch) -> jnp.ndarray:
+    """(B_NRO, n_tasks) multi-task logits, ROO path."""
+    return lsr_logits_from_user(params, cfg, batch,
+                                lsr_user_repr(params, cfg, batch))
 
 
 def lsr_logits_impression(params: Dict, cfg: LSRConfig, batch: ROOBatch) -> jnp.ndarray:

@@ -116,14 +116,21 @@ def retrieval_loss_roo(params: Dict, cfg: TwoTowerConfig, batch: ROOBatch,
     return -jnp.sum(pos_logp * w) / jnp.maximum(jnp.sum(w), 1.0)
 
 
-def esr_logits_roo(params: Dict, cfg: TwoTowerConfig, batch: ROOBatch) -> jnp.ndarray:
-    """ESR: fanned-out user repr + item repr -> interaction MLP -> logit."""
-    u = user_tower(params, cfg, batch)
+def esr_logits_from_user(params: Dict, cfg: TwoTowerConfig, batch: ROOBatch,
+                         u: jnp.ndarray) -> jnp.ndarray:
+    """ESR NRO half, given a precomputed (B_RO, d) user representation
+    (from ``user_tower`` or a serving cache)."""
     u_at_nro = fanout(u, batch.segment_ids)
     v = item_tower(params, cfg, batch.item_ids, batch.nro_dense)
     dot = jnp.sum(u_at_nro * v, axis=-1, keepdims=True)
     x = jnp.concatenate([u_at_nro, v, dot], axis=-1)
     return mlp_apply(params["esr_mlp"], x)[:, 0]
+
+
+def esr_logits_roo(params: Dict, cfg: TwoTowerConfig, batch: ROOBatch) -> jnp.ndarray:
+    """ESR: fanned-out user repr + item repr -> interaction MLP -> logit."""
+    return esr_logits_from_user(params, cfg, batch,
+                                user_tower(params, cfg, batch))
 
 
 def esr_loss_roo(params: Dict, cfg: TwoTowerConfig, batch: ROOBatch) -> jnp.ndarray:

@@ -1,0 +1,78 @@
+"""Shape-bucketed batching for serving.
+
+``jax.jit`` specializes on input shapes, so a serving path that packs every
+flush into an exactly-sized batch recompiles once per distinct
+(B_RO, B_NRO) — ragged traffic would trigger a compile storm. Instead the
+engine rounds every flush up to a rung of a fixed *bucket ladder*: jit only
+ever sees ``len(ladder)`` shapes, and after warmup no request ever waits on
+a compile.
+
+The ladder is geometric (both dims double per rung) so padding waste is
+bounded by ~2x while the number of compiled variants stays logarithmic in
+the max batch size.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class BucketSpec:
+    """One compiled batch shape: B_RO request rows, B_NRO impression slots."""
+    b_ro: int
+    b_nro: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketLadder:
+    rungs: Tuple[BucketSpec, ...]     # sorted ascending
+
+    def __post_init__(self):
+        assert self.rungs, "empty bucket ladder"
+        assert list(self.rungs) == sorted(self.rungs), \
+            "ladder rungs must be sorted ascending"
+
+    @classmethod
+    def geometric(cls, min_b_ro: int = 4, min_b_nro: int = 32,
+                  max_b_ro: int = 64, max_b_nro: int = 512) -> "BucketLadder":
+        rungs = []
+        b_ro = min(min_b_ro, max_b_ro)
+        b_nro = min(min_b_nro, max_b_nro)
+        while True:
+            rungs.append(BucketSpec(b_ro, b_nro))
+            if b_ro >= max_b_ro and b_nro >= max_b_nro:
+                break
+            b_ro = min(2 * b_ro, max_b_ro)
+            b_nro = min(2 * b_nro, max_b_nro)
+        return cls(tuple(rungs))
+
+    @classmethod
+    def fixed(cls, b_ro: int, b_nro: int) -> "BucketLadder":
+        """Single-shape ladder — the pre-engine behavior (one compile)."""
+        return cls((BucketSpec(b_ro, b_nro),))
+
+    @property
+    def max_rung(self) -> BucketSpec:
+        return self.rungs[-1]
+
+    def select(self, n_requests: int, n_impressions: int) -> BucketSpec:
+        """Smallest rung that fits the demand; the top rung if nothing does
+        (the batcher then splits the flush into several top-rung batches)."""
+        for r in self.rungs:
+            if r.b_ro >= n_requests and r.b_nro >= n_impressions:
+                return r
+        return self.rungs[-1]
+
+
+@dataclasses.dataclass
+class BucketStats:
+    """Observed rung usage — distinct rungs == distinct jit compilations."""
+    counts: Dict[BucketSpec, int] = dataclasses.field(default_factory=dict)
+
+    def record(self, spec: BucketSpec) -> None:
+        self.counts[spec] = self.counts.get(spec, 0) + 1
+
+    @property
+    def distinct_shapes(self) -> int:
+        return len(self.counts)

@@ -1,0 +1,309 @@
+"""Adaptive micro-batching serving engine — the request is the unit of work.
+
+Fixes the seed server's score/request misalignment and rebuilds serving
+around three ideas from the paper's §2.2:
+
+  * **request-aligned scoring** — the batcher's ``BatchPlan`` maps every
+    request to its contiguous slot range, so the engine returns exactly one
+    score array per input request, shape-aligned with ``request.item_ids``
+    (empty for zero-impression requests). Requests larger than the biggest
+    batch are *split* across batches and reassembled, never silently
+    truncated.
+  * **adaptive micro-batching** — online traffic is admitted into a pending
+    queue and flushed by a size-or-deadline policy (``EnginePolicy``); every
+    flush is rounded up to a rung of a fixed shape ladder
+    (serve/bucketing.py) so ragged traffic never causes per-shape jit
+    recompiles.
+  * **user-tower memoization** — with split model entry points
+    (``user_fn`` + ``score_from_user``), the RO side is computed once per
+    unique request payload and reused across repeat candidates
+    (serve/user_cache.py) — ROO dedup applied to inference.
+
+The bulk path (``score_stream``) is a generator: scores leave the engine one
+flush-group at a time, so offline scoring of 262k impressions never holds
+the full result set host-side twice.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import (Callable, Dict, Hashable, Iterable, Iterator, List,
+                    Optional, Sequence, Tuple)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.joiner import ROOSample
+from repro.data.batcher import BatcherConfig, BatchPlan, ROOBatcher
+from repro.serve.bucketing import BucketLadder, BucketStats
+from repro.serve.user_cache import UserTowerCache, request_key
+
+
+@dataclasses.dataclass
+class EnginePolicy:
+    """Admission policy: a flush happens when the pending queue reaches
+    ``max_requests`` requests or ``max_impressions`` impressions (size), or
+    when the oldest pending request has waited ``max_delay_ms`` (deadline)."""
+    max_requests: int = 64
+    max_impressions: int = 512
+    max_delay_ms: float = 2.0
+    hist_len: int = 64
+
+
+@dataclasses.dataclass
+class EngineStats:
+    n_requests: int = 0
+    n_impressions: int = 0
+    n_batches: int = 0
+    n_split_requests: int = 0          # requests scored across >1 batch
+    n_size_flushes: int = 0
+    n_deadline_flushes: int = 0
+    n_forced_flushes: int = 0
+    n_full_cache_batches: int = 0      # batches whose user tower was skipped
+    buckets: BucketStats = dataclasses.field(default_factory=BucketStats)
+
+
+def split_oversize(sample: ROOSample, cap: int) -> List[ROOSample]:
+    """Chunk a request with more than ``cap`` impressions into sub-requests
+    sharing the RO payload. The engine scores each chunk and concatenates —
+    alignment with ``item_ids`` is preserved for arbitrarily large requests."""
+    if sample.num_impressions <= cap:
+        return [sample]
+    return [
+        dataclasses.replace(
+            sample,
+            item_ids=sample.item_ids[lo:lo + cap],
+            item_dense=sample.item_dense[lo:lo + cap],
+            item_idlist=sample.item_idlist[lo:lo + cap],
+            labels=sample.labels[lo:lo + cap])
+        for lo in range(0, sample.num_impressions, cap)
+    ]
+
+
+class ScoringEngine:
+    """Request-aligned, cache-aware scoring around jit'd model halves.
+
+    ``score_fn(params, batch) -> (B_NRO,) | (B_NRO, n_tasks)`` is the fused
+    forward. Passing the split entry points ``user_fn(params, batch) ->
+    (B_RO, ...)`` and ``score_from_user(params, batch, user)`` additionally
+    enables the user-tower cache.
+
+    Two front ends share one scoring core:
+      * online:  ``submit`` / ``poll`` / ``flush`` / ``take``  (micro-batcher)
+      * bulk:    ``score_stream`` (generator) / ``score_requests`` (list)
+    """
+
+    def __init__(self, params, score_fn: Callable, *,
+                 policy: Optional[EnginePolicy] = None,
+                 ladder: Optional[BucketLadder] = None,
+                 user_fn: Optional[Callable] = None,
+                 score_from_user: Optional[Callable] = None,
+                 cache: Optional[UserTowerCache] = None,
+                 attn_backend: Optional[str] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        if cache is not None and (user_fn is None or score_from_user is None):
+            raise ValueError("user-tower cache requires the split entry "
+                             "points user_fn and score_from_user")
+        self._params = params
+        self.policy = policy or EnginePolicy()
+        self.ladder = ladder or BucketLadder.geometric(
+            max_b_ro=self.policy.max_requests,
+            max_b_nro=self.policy.max_impressions)
+        self.cache = cache
+        self.attn_backend = attn_backend
+        self.clock = clock
+        self.stats = EngineStats()
+        self._score = jax.jit(score_fn)
+        self._user = jax.jit(user_fn) if user_fn is not None else None
+        self._from_user = (jax.jit(score_from_user)
+                           if score_from_user is not None else None)
+        # online micro-batcher state
+        self._pending: List[Tuple[int, ROOSample]] = []
+        self._pending_imps = 0
+        self._oldest_ts: Optional[float] = None
+        self._next_ticket = 0
+        self._results: Dict[int, np.ndarray] = {}
+        # trailing score dims ((,) single-task, (n_tasks,) multi-task) from
+        # the last scored batch — used to shape empty results when a whole
+        # flush-group has zero impressions and the model never runs
+        self._score_tail: Tuple[int, ...] = ()
+
+    @property
+    def params(self):
+        return self._params
+
+    @params.setter
+    def params(self, new_params) -> None:
+        # cached user-tower rows were computed with the old params —
+        # a weight refresh must not serve mixed-version scores
+        self._params = new_params
+        if self.cache is not None:
+            self.cache.clear()
+
+    # ---- online front end ----------------------------------------------------
+    def submit(self, request: ROOSample) -> int:
+        """Admit one request; returns a ticket redeemable via ``take``."""
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        if not self._pending:
+            self._oldest_ts = self.clock()
+        self._pending.append((ticket, request))
+        self._pending_imps += request.num_impressions
+        return ticket
+
+    def poll(self, now: Optional[float] = None) -> bool:
+        """Flush if the admission policy triggers. Returns True if a batch
+        was scored (results became available)."""
+        if not self._pending:
+            return False
+        now = self.clock() if now is None else now
+        if (len(self._pending) >= self.policy.max_requests
+                or self._pending_imps >= self.policy.max_impressions):
+            self.stats.n_size_flushes += 1
+        elif (now - self._oldest_ts) * 1e3 >= self.policy.max_delay_ms:
+            self.stats.n_deadline_flushes += 1
+        else:
+            return False
+        self._drain()
+        return True
+
+    def flush(self) -> None:
+        """Force-score everything pending regardless of policy."""
+        if self._pending:
+            self.stats.n_forced_flushes += 1
+            self._drain()
+
+    def take(self, ticket: int) -> Optional[np.ndarray]:
+        """Scores for a submitted request, or None if not yet flushed."""
+        return self._results.pop(ticket, None)
+
+    def _drain(self) -> None:
+        pending, self._pending = self._pending, []
+        self._pending_imps, self._oldest_ts = 0, None
+        for ticket, scores in self._score_keyed(pending):
+            self._results[ticket] = scores
+
+    # ---- bulk front end ------------------------------------------------------
+    def score_stream(self, requests: Iterable[ROOSample]
+                     ) -> Iterator[Tuple[int, np.ndarray]]:
+        """Yield ``(request_index, scores)`` as batches complete — at most one
+        flush-group of scores is held host-side at any time."""
+        yield from self._score_keyed(enumerate(requests))
+
+    def score_requests(self, requests: Sequence[ROOSample]
+                       ) -> List[np.ndarray]:
+        """One score array per input request, exactly aligned with that
+        request's ``item_ids`` (empty array for zero-impression requests)."""
+        out: List[Optional[np.ndarray]] = [None] * len(requests)
+        for i, scores in self.score_stream(requests):
+            out[i] = scores
+        return out
+
+    # ---- scoring core --------------------------------------------------------
+    def _score_keyed(self, keyed: Iterable[Tuple[Hashable, ROOSample]]
+                     ) -> Iterator[Tuple[Hashable, np.ndarray]]:
+        """Split oversize requests, group into bucket-shaped flushes, score,
+        reassemble per original key. Yields each key exactly once."""
+        top = self.ladder.max_rung
+        parts_needed: Dict[Hashable, int] = {}
+        parts_got: Dict[Hashable, List[np.ndarray]] = {}
+        group: List[Tuple[Hashable, ROOSample]] = []
+        group_imps = 0
+        # zero-impression requests never enter a batch; they resolve to an
+        # empty array once the trailing score dims are known (i.e. after the
+        # first real batch of this or an earlier call), so a multi-task
+        # model yields (0, n_tasks) rather than (0,)
+        deferred_empty: List[Hashable] = []
+
+        def reassemble(scored: Iterator[Tuple[Hashable, np.ndarray]]):
+            for key, piece in scored:
+                got = parts_got.setdefault(key, [])
+                got.append(piece)
+                if len(got) == parts_needed[key]:
+                    del parts_got[key], parts_needed[key]
+                    yield key, (np.concatenate(got, axis=0)
+                                if len(got) > 1 else got[0])
+
+        def flush_empty():
+            while deferred_empty:
+                yield (deferred_empty.pop(),
+                       np.zeros((0,) + self._score_tail, np.float32))
+
+        for key, sample in keyed:
+            self.stats.n_requests += 1
+            self.stats.n_impressions += sample.num_impressions
+            if sample.num_impressions == 0:
+                deferred_empty.append(key)
+                continue
+            parts = split_oversize(sample, top.b_nro)
+            parts_needed[key] = len(parts)
+            if len(parts) > 1:
+                self.stats.n_split_requests += 1
+            for part in parts:
+                n = part.num_impressions
+                if group and (len(group) + 1 > top.b_ro
+                              or group_imps + n > top.b_nro):
+                    yield from reassemble(self._score_group(group))
+                    yield from flush_empty()
+                    group, group_imps = [], 0
+                group.append((key, part))
+                group_imps += n
+        if group:
+            yield from reassemble(self._score_group(group))
+        yield from flush_empty()
+        assert not parts_needed, "engine bug: unreassembled request parts"
+
+    def _score_group(self, group: List[Tuple[Hashable, ROOSample]]
+                     ) -> Iterator[Tuple[Hashable, np.ndarray]]:
+        """Score one flush-group at its bucket shape; yields (key, piece)
+        for every request part via the batch plan's slot mapping."""
+        n_imps = sum(s.num_impressions for _, s in group)
+        bucket = self.ladder.select(len(group), n_imps)
+        self.stats.buckets.record(bucket)
+        batcher = ROOBatcher(BatcherConfig(
+            b_ro=bucket.b_ro, b_nro=bucket.b_nro,
+            hist_len=self.policy.hist_len))
+        samples = [s for _, s in group]
+        for batch, plan in batcher.batches_with_plan(samples):
+            scores = self._score_batch(batch, samples, plan)
+            self.stats.n_batches += 1
+            for p in plan.requests:
+                if p.n_dropped:
+                    raise RuntimeError(
+                        "engine invariant violated: truncation inside a "
+                        f"bucket-shaped batch ({p.n_dropped} dropped)")
+                yield (group[p.request_index][0],
+                       scores[p.slot_start:p.slot_start + p.n_packed])
+
+    def _score_batch(self, batch, samples: List[ROOSample],
+                     plan: BatchPlan) -> np.ndarray:
+        from repro.kernels.dispatch import use_backend
+        with use_backend(self.attn_backend):
+            scores = self._score_batch_device(batch, samples, plan)
+        out = np.asarray(scores)
+        self._score_tail = out.shape[1:]
+        return out
+
+    def _score_batch_device(self, batch, samples: List[ROOSample],
+                            plan: BatchPlan):
+        if self.cache is None:
+            return self._score(self.params, batch)
+        # cache path: try to serve the whole RO side from cache; on any
+        # miss compute the user tower once for the batch and backfill.
+        keys = {p.row: request_key(samples[p.request_index])
+                for p in plan.requests}
+        cached = {row: self.cache.get(k) for row, k in keys.items()}
+        if cached and all(v is not None for v in cached.values()):
+            any_row = next(iter(cached.values()))
+            u_host = np.zeros((batch.b_ro,) + any_row.shape, any_row.dtype)
+            for row, v in cached.items():
+                u_host[row] = v
+            user = jnp.asarray(u_host)
+            self.stats.n_full_cache_batches += 1
+        else:
+            user = self._user(self.params, batch)
+            u_host = np.asarray(user)
+            for row, k in keys.items():
+                self.cache.put(k, u_host[row])
+        return self._from_user(self.params, batch, user)

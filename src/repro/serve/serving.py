@@ -1,11 +1,19 @@
 """ROO inference (paper §2.2): the serving stack shares the training format.
 
 A serving request is {user (RO) features, m candidate items} — exactly one
-ROOSample without labels. The server batches requests into a ROOBatch and
-calls the SAME model forward used in training: user-side computation runs
-once per request on-device (deferred fanout *inside* the model), eliminating
-the client-side user-feature broadcast + server-side dedup the paper calls
-out as premature complexity.
+ROOSample without labels. ``ROOServer`` is the batteries-included front end
+over the request-centric ``ScoringEngine`` (serve/engine.py):
+
+  * scores come back **exactly aligned**: one array per input request,
+    shape-aligned with that request's ``item_ids`` (empty array for a
+    zero-impression request); oversize requests are split across batches
+    and reassembled, never silently truncated;
+  * flushes are shape-bucketed (serve/bucketing.py) so ragged traffic does
+    not trigger per-shape jit recompiles;
+  * with split model entry points, the user tower is memoized across repeat
+    requests (serve/user_cache.py) — ROO dedup applied to inference.
+
+See docs/SERVING.md for the architecture and the alignment contract.
 
 Also provides the three recsys serving regimes of the assigned shapes:
   serve_p99   — small online batches (512);
@@ -15,56 +23,95 @@ Also provides the three recsys serving regimes of the assigned shapes:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.joiner import ROOSample
-from repro.core.roo_batch import ROOBatch
-from repro.data.batcher import BatcherConfig, ROOBatcher
+from repro.serve.bucketing import BucketLadder
+from repro.serve.engine import EnginePolicy, EngineStats, ScoringEngine
+from repro.serve.user_cache import UserTowerCache
+
+__all__ = ["ServeConfig", "ROOServer", "retrieval_scoring"]
 
 
 @dataclasses.dataclass
 class ServeConfig:
-    b_ro: int = 64
-    b_nro: int = 512
+    b_ro: int = 64                 # max requests per batch (top bucket rung)
+    b_nro: int = 512               # max impression slots per batch
     hist_len: int = 64
     # HSTU attention backend for inference (kernels/dispatch.py); None =
     # auto (fused Pallas kernel on TPU, chunked jnp elsewhere).
     attn_backend: Optional[str] = None
+    # engine knobs
+    bucketed: bool = True          # shape ladder vs a single fixed shape
+    max_delay_ms: float = 2.0      # online admission deadline
+    cache_user_tower: bool = False # needs user_fn + score_from_user
+    cache_capacity: int = 4096
 
 
 class ROOServer:
-    """Batched request server around a jit'd scoring function.
+    """Request-aligned batched server around jit'd scoring functions.
 
-    score_fn(params, batch) -> (B_NRO,) or (B_NRO, n_tasks) scores.
+    ``score_fn(params, batch) -> (B_NRO,) or (B_NRO, n_tasks)`` scores.
+    Optionally pass the model's split entry points ``user_fn(params, batch)``
+    and ``score_from_user(params, batch, user)`` (e.g. ``lsr_user_repr`` /
+    ``lsr_logits_from_user``) to enable the user-tower cache
+    (``cfg.cache_user_tower=True``).
+
     ``cfg.attn_backend`` pins the HSTU attention backend for serving — the
     backend is resolved when the scoring function first traces, so the same
     fused kernel used in training serves inference traffic.
     """
 
-    def __init__(self, params, score_fn: Callable, cfg: ServeConfig):
-        self.params = params
+    def __init__(self, params, score_fn: Callable, cfg: ServeConfig,
+                 user_fn: Optional[Callable] = None,
+                 score_from_user: Optional[Callable] = None):
         self.cfg = cfg
-        self._score = jax.jit(score_fn)
-        self._batcher = ROOBatcher(BatcherConfig(
-            b_ro=cfg.b_ro, b_nro=cfg.b_nro, hist_len=cfg.hist_len))
+        policy = EnginePolicy(max_requests=cfg.b_ro,
+                              max_impressions=cfg.b_nro,
+                              max_delay_ms=cfg.max_delay_ms,
+                              hist_len=cfg.hist_len)
+        ladder = (BucketLadder.geometric(
+                      min_b_ro=min(4, cfg.b_ro), min_b_nro=min(32, cfg.b_nro),
+                      max_b_ro=cfg.b_ro, max_b_nro=cfg.b_nro)
+                  if cfg.bucketed else
+                  BucketLadder.fixed(cfg.b_ro, cfg.b_nro))
+        cache = (UserTowerCache(cfg.cache_capacity)
+                 if cfg.cache_user_tower else None)
+        self.engine = ScoringEngine(
+            params, score_fn, policy=policy, ladder=ladder,
+            user_fn=user_fn, score_from_user=score_from_user, cache=cache,
+            attn_backend=cfg.attn_backend)
+
+    @property
+    def params(self):
+        return self.engine.params
+
+    @params.setter
+    def params(self, new_params) -> None:
+        """Weight refresh: swaps params and clears the user-tower cache."""
+        self.engine.params = new_params
+
+    @property
+    def stats(self) -> EngineStats:
+        return self.engine.stats
+
+    @property
+    def cache(self) -> Optional[UserTowerCache]:
+        return self.engine.cache
 
     def score_requests(self, requests: List[ROOSample]) -> List[np.ndarray]:
-        """Returns per-request score arrays aligned with request.item_ids."""
-        from repro.kernels.dispatch import use_backend
-        out: List[np.ndarray] = []
-        with use_backend(self.cfg.attn_backend):
-            for batch in self._batcher.batches(requests):
-                scores = np.asarray(self._score(self.params, batch))
-                seg = np.asarray(batch.segment_ids)
-                for r in range(batch.b_ro):
-                    sel = scores[seg == r]
-                    if len(sel):
-                        out.append(sel)
-        return out[:len(requests)]
+        """Exactly ``len(requests)`` score arrays, each aligned with the
+        corresponding ``request.item_ids`` (empty for zero impressions)."""
+        return self.engine.score_requests(requests)
+
+    def score_requests_iter(self, requests) -> Iterator[Tuple[int, np.ndarray]]:
+        """Streaming variant: yields ``(request_index, scores)`` per batch —
+        bulk scoring never holds the full result set host-side twice."""
+        return self.engine.score_stream(requests)
 
 
 def retrieval_scoring(user_repr: jnp.ndarray,

@@ -1,0 +1,98 @@
+"""User-tower memoization — ROO dedup applied to inference (paper §2.2).
+
+The paper's serving insight is that the request is the unit of work: all of
+a request's candidates share one RO (user-side) computation. The engine
+already amortizes that *within* a batch (the model fans the user repr out on
+device); this cache extends the amortization *across* requests — bulk
+scoring and retrieval re-score the same user against many candidate waves,
+and repeat requests in online traffic re-present identical RO payloads.
+
+Keys fingerprint the full RO payload (user id, dense, id-list, history), so
+a user whose features evolved gets a fresh entry rather than a stale hit —
+history-append is the natural invalidation. Values are per-request rows of
+the user-tower output (host numpy), LRU-evicted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.joiner import ROOSample
+
+CacheKey = Tuple[int, bytes]
+
+
+def request_key(sample: ROOSample) -> CacheKey:
+    """Fingerprint of a request's RO payload. Two requests with identical
+    user-side features map to the same key regardless of their candidates."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.asarray(sample.ro_dense, np.float32).tobytes())
+    h.update(np.asarray(list(sample.ro_idlist or []), np.int64).tobytes())
+    h.update(b"|")
+    h.update(np.asarray(list(sample.history_ids or []), np.int64).tobytes())
+    h.update(b"|")
+    h.update(np.asarray(list(sample.history_actions or []), np.int64).tobytes())
+    return (sample.user_id, h.digest())
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    invalidations: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class UserTowerCache:
+    """LRU cache: RO-payload fingerprint -> user-tower output row (numpy)."""
+
+    def __init__(self, capacity: int = 4096):
+        assert capacity > 0
+        self.capacity = capacity
+        self._data: "OrderedDict[CacheKey, np.ndarray]" = OrderedDict()
+        self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key: CacheKey) -> bool:
+        return key in self._data
+
+    def get(self, key: CacheKey) -> Optional[np.ndarray]:
+        row = self._data.get(key)
+        if row is None:
+            self.stats.misses += 1
+            return None
+        self._data.move_to_end(key)
+        self.stats.hits += 1
+        return row
+
+    def put(self, key: CacheKey, row: np.ndarray) -> None:
+        # copy: callers pass views into the full (b_ro, ...) batch output,
+        # and a cached view would pin the whole batch array in memory
+        self._data[key] = np.array(row, copy=True)
+        self._data.move_to_end(key)
+        while len(self._data) > self.capacity:
+            self._data.popitem(last=False)
+            self.stats.evictions += 1
+
+    def invalidate_user(self, user_id: int) -> int:
+        """Drop every entry for a user (e.g. on a feature-store update that
+        bypasses the request payload). Returns the number dropped."""
+        doomed = [k for k in self._data if k[0] == user_id]
+        for k in doomed:
+            del self._data[k]
+        self.stats.invalidations += len(doomed)
+        return len(doomed)
+
+    def clear(self) -> None:
+        self._data.clear()

@@ -46,12 +46,17 @@ def make_train_step(loss_fn: Callable, opt: Optimizer,
         params = state["params"]
 
         if microbatches > 1:
-            def micro(carry, mb):
+            def micro(carry, xs):
+                mb, i = xs
                 acc, = carry
-                l, g = jax.value_and_grad(loss_fn)(params, mb, rng)
+                # distinct rng per microbatch — otherwise dropout/sampling
+                # repeat across the accumulation scan
+                l, g = jax.value_and_grad(loss_fn)(
+                    params, mb, jax.random.fold_in(rng, i))
                 return (jax.tree.map(jnp.add, acc, g),), l
             zero = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
-            (gsum,), losses = jax.lax.scan(micro, (zero,), batch)
+            (gsum,), losses = jax.lax.scan(
+                micro, (zero,), (batch, jnp.arange(microbatches)))
             grads = jax.tree.map(lambda g: g / microbatches, gsum)
             loss = jnp.mean(losses)
         else:

@@ -80,6 +80,62 @@ class TestBatcher:
         seg = np.asarray(batch.segment_ids)
         assert seg.max() <= cfg.b_ro // cfg.n_shards   # local ids
 
+    @staticmethod
+    def _mk_request(uid, n_items):
+        from repro.core.joiner import ROOSample
+        return ROOSample(
+            request_id=uid, user_id=uid,
+            ro_dense=np.ones((4,), np.float32), ro_idlist=[1],
+            history_ids=[1, 2], history_actions=[1, 0],
+            item_ids=list(range(n_items)),
+            item_dense=[np.ones((4,), np.float32)] * n_items,
+            item_idlist=[[1]] * n_items,
+            labels=[{"click": 0.0, "view_sec": 0.0}] * n_items)
+
+    def test_truncation_counted_and_warned(self):
+        """Oversize requests used to be truncated silently; drops are now a
+        per-batch stat + warning so training-data loss is observable."""
+        from repro.data.batcher import BatcherConfig, ROOBatcher
+        batcher = ROOBatcher(BatcherConfig(b_ro=4, b_nro=8))
+        with pytest.warns(UserWarning, match="dropped 12 impression"):
+            out = list(batcher.batches_with_plan([self._mk_request(1, 20)]))
+        assert len(out) == 1
+        _, plan = out[0]
+        (p,) = plan.requests
+        assert (p.n_total, p.n_packed, p.n_dropped) == (20, 8, 12)
+        assert batcher.stats.n_impressions_dropped == 12
+        assert batcher.stats.n_requests_truncated == 1
+        assert batcher.stats.n_impressions_packed == 8
+
+    def test_no_warning_without_truncation(self, roo_samples):
+        import warnings as _warnings
+        from repro.data.batcher import BatcherConfig, ROOBatcher
+        batcher = ROOBatcher(BatcherConfig(b_ro=32, b_nro=256))
+        with _warnings.catch_warnings():
+            _warnings.simplefilter("error")
+            list(batcher.batches_with_plan(roo_samples))
+        assert batcher.stats.n_impressions_dropped == 0
+        assert batcher.stats.n_requests == len(roo_samples)
+
+    def test_plan_slot_mapping(self, roo_samples):
+        """Plan invariants: a request's impressions are the contiguous slots
+        [slot_start, slot_start+n_packed) of its row; real slots are covered
+        exactly once; every input request appears in exactly one plan."""
+        from repro.data.batcher import BatcherConfig, ROOBatcher
+        cfg = BatcherConfig(b_ro=16, b_nro=128)
+        seen = []
+        for batch, plan in ROOBatcher(cfg).batches_with_plan(roo_samples):
+            seg = np.asarray(batch.segment_ids)
+            covered = np.zeros((cfg.b_nro,), bool)
+            for p in plan.requests:
+                seen.append(p.request_index)
+                sl = slice(p.slot_start, p.slot_start + p.n_packed)
+                assert (seg[sl] == p.row).all()
+                assert not covered[sl].any()
+                covered[sl] = True
+            assert covered.sum() == (seg < cfg.b_ro).sum()
+        assert sorted(seen) == list(range(len(roo_samples)))
+
 
 class TestEmbeddingBag:
     @pytest.mark.parametrize("pooling", ["sum", "mean", "max"])

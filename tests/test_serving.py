@@ -1,0 +1,305 @@
+"""Serving engine: score/request alignment contract, request splitting,
+bucketing, the online micro-batcher, and the user-tower cache.
+
+The alignment contract (docs/SERVING.md): ``score_requests`` returns exactly
+``len(requests)`` arrays, each shape-aligned with that request's
+``item_ids`` — empty array for zero-impression requests, full-length arrays
+for requests split across batches. The seed server violated all of these
+(zero-impression requests produced no row; oversize requests silently lost
+scores; ``out[:len(requests)]`` hid both).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fanout import fanout
+from repro.core.joiner import ROOSample
+from repro.serve.bucketing import BucketLadder, BucketSpec
+from repro.serve.engine import EnginePolicy, ScoringEngine, split_oversize
+from repro.serve.serving import ROOServer, ServeConfig
+from repro.serve.user_cache import UserTowerCache, request_key
+
+
+def mk_request(uid: int, item_ids, n_dense=4) -> ROOSample:
+    return ROOSample(
+        request_id=uid, user_id=uid,
+        ro_dense=np.full((n_dense,), float(uid), np.float32),
+        ro_idlist=[uid % 7 + 1],
+        history_ids=[1 + uid % 3, 2, 3], history_actions=[1, 0, 1],
+        item_ids=[int(i) for i in item_ids],
+        item_dense=[np.full((4,), float(i), np.float32) for i in item_ids],
+        item_idlist=[[int(i) % 5 + 1] for i in item_ids],
+        labels=[{"click": 0.0, "view_sec": 0.0} for _ in item_ids])
+
+
+# item-id echo: request i's scores must equal its own item_ids — any
+# misalignment (dropped rows, shifted slices, truncation) is detected exactly
+def echo_score_fn(params, batch):
+    return batch.item_ids.astype(jnp.float32)
+
+
+def echo_multitask_fn(params, batch):
+    ids = batch.item_ids.astype(jnp.float32)
+    return jnp.stack([ids, -ids], axis=-1)
+
+
+class TestScoreAlignment:
+    def test_one_array_per_request_incl_zero_impressions(self):
+        reqs = [mk_request(0, [5, 6, 7]),
+                mk_request(1, []),                       # zero impressions
+                mk_request(2, [11]),
+                mk_request(3, [20, 21, 22, 23, 24]),
+                mk_request(4, [])]                       # zero at the tail
+        server = ROOServer(None, echo_score_fn,
+                           ServeConfig(b_ro=4, b_nro=8))
+        scores = server.score_requests(reqs)
+        assert len(scores) == len(reqs)
+        for r, s in zip(reqs, scores):
+            assert s.shape == (r.num_impressions,)
+            np.testing.assert_array_equal(s, np.asarray(r.item_ids, np.float32))
+
+    def test_all_zero_impression_traffic(self):
+        # a whole flush-group with nothing to score must not reach the model
+        reqs = [mk_request(i, []) for i in range(6)]
+        server = ROOServer(None, echo_score_fn,
+                           ServeConfig(b_ro=4, b_nro=8))
+        scores = server.score_requests(reqs)
+        assert len(scores) == 6
+        assert all(s.shape == (0,) for s in scores)
+        assert server.stats.n_batches == 0
+
+    def test_request_split_across_batches(self):
+        # 50 impressions >> b_nro=16: split into chunks, reassembled in full
+        big = mk_request(7, list(range(100, 150)))
+        small = mk_request(8, [3, 4])
+        server = ROOServer(None, echo_score_fn,
+                           ServeConfig(b_ro=4, b_nro=16))
+        scores = server.score_requests([big, small])
+        np.testing.assert_array_equal(
+            scores[0], np.arange(100, 150, dtype=np.float32))
+        np.testing.assert_array_equal(scores[1], [3.0, 4.0])
+        assert server.stats.n_split_requests == 1
+        assert server.stats.n_batches >= 4       # 50/16 -> at least 4 chunks
+
+    def test_request_set_larger_than_one_batch(self):
+        reqs = [mk_request(i, [10 * i + j for j in range(1 + i % 4)])
+                for i in range(40)]
+        server = ROOServer(None, echo_score_fn,
+                           ServeConfig(b_ro=8, b_nro=16))
+        scores = server.score_requests(reqs)
+        assert len(scores) == 40
+        for r, s in zip(reqs, scores):
+            np.testing.assert_array_equal(s, np.asarray(r.item_ids, np.float32))
+
+    def test_multitask_scores_aligned(self):
+        reqs = [mk_request(0, [5, 6]), mk_request(1, []),
+                mk_request(2, [7, 8, 9])]
+        server = ROOServer(None, echo_multitask_fn,
+                           ServeConfig(b_ro=4, b_nro=8))
+        scores = server.score_requests(reqs)
+        for r, s in zip(reqs, scores):
+            assert s.shape == (r.num_impressions, 2)
+            np.testing.assert_array_equal(s[:, 0], np.asarray(r.item_ids, np.float32))
+            np.testing.assert_array_equal(s[:, 1], -np.asarray(r.item_ids, np.float32))
+
+    def test_multitask_empty_tail_when_zero_imps_lead(self):
+        # zero-impression requests ahead of any scored batch must still get
+        # the model's trailing dims once a real batch runs in the same call
+        reqs = [mk_request(i, []) for i in range(4)] + [mk_request(9, [5, 6])]
+        server = ROOServer(None, echo_multitask_fn,
+                           ServeConfig(b_ro=4, b_nro=8))
+        scores = server.score_requests(reqs)
+        assert [s.shape for s in scores] == [(0, 2)] * 4 + [(2, 2)]
+
+    def test_streaming_yields_each_request_once(self):
+        reqs = [mk_request(i, list(range(i))) for i in range(20)]
+        server = ROOServer(None, echo_score_fn,
+                           ServeConfig(b_ro=4, b_nro=16))
+        seen = {}
+        for idx, s in server.score_requests_iter(reqs):
+            assert idx not in seen
+            seen[idx] = s
+        assert sorted(seen) == list(range(20))
+        for i, r in enumerate(reqs):
+            np.testing.assert_array_equal(
+                seen[i], np.asarray(r.item_ids, np.float32))
+
+
+class TestSplitOversize:
+    def test_split_preserves_payload(self):
+        r = mk_request(1, list(range(10)))
+        parts = split_oversize(r, 4)
+        assert [p.num_impressions for p in parts] == [4, 4, 2]
+        assert sum((p.item_ids for p in parts), []) == r.item_ids
+        for p in parts:
+            assert p.user_id == r.user_id
+            np.testing.assert_array_equal(p.ro_dense, r.ro_dense)
+            assert len(p.item_dense) == len(p.item_ids) == len(p.labels)
+
+    def test_no_split_when_fits(self):
+        r = mk_request(1, [1, 2, 3])
+        assert split_oversize(r, 4) == [r]
+
+
+class TestBucketing:
+    def test_ladder_rounds_up(self):
+        ladder = BucketLadder.geometric(min_b_ro=4, min_b_nro=32,
+                                        max_b_ro=64, max_b_nro=512)
+        assert ladder.select(3, 10) == BucketSpec(4, 32)
+        assert ladder.select(5, 10) == BucketSpec(8, 64)
+        assert ladder.select(4, 33) == BucketSpec(8, 64)
+        assert ladder.select(1000, 9999) == BucketSpec(64, 512)   # top rung
+
+    def test_engine_reuses_few_shapes(self):
+        # ragged traffic, many distinct (n_req, n_imp) demands -> few shapes
+        reqs = [mk_request(i, list(range(1 + (7 * i) % 13))) for i in range(60)]
+        server = ROOServer(None, echo_score_fn,
+                           ServeConfig(b_ro=16, b_nro=64))
+        server.score_requests(reqs)
+        assert server.stats.buckets.distinct_shapes <= 4
+
+    def test_fixed_ladder_single_shape(self):
+        reqs = [mk_request(i, [i]) for i in range(10)]
+        server = ROOServer(None, echo_score_fn,
+                           ServeConfig(b_ro=4, b_nro=8, bucketed=False))
+        server.score_requests(reqs)
+        assert server.stats.buckets.distinct_shapes == 1
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+class TestOnlineMicroBatcher:
+    def _engine(self, clock, **kw):
+        policy = EnginePolicy(max_requests=kw.pop("max_requests", 4),
+                              max_impressions=kw.pop("max_impressions", 64),
+                              max_delay_ms=kw.pop("max_delay_ms", 5.0))
+        return ScoringEngine(None, echo_score_fn, policy=policy, clock=clock)
+
+    def test_deadline_flush(self):
+        clock = _FakeClock()
+        eng = self._engine(clock)
+        t0 = eng.submit(mk_request(0, [1, 2]))
+        assert not eng.poll()                      # under size + deadline
+        assert eng.take(t0) is None
+        clock.t += 0.010                           # 10ms > 5ms deadline
+        assert eng.poll()
+        np.testing.assert_array_equal(eng.take(t0), [1.0, 2.0])
+        assert eng.stats.n_deadline_flushes == 1
+
+    def test_size_flush(self):
+        clock = _FakeClock()
+        eng = self._engine(clock, max_requests=3)
+        tickets = [eng.submit(mk_request(i, [i])) for i in range(3)]
+        assert eng.poll()                          # hit max_requests
+        for i, t in enumerate(tickets):
+            np.testing.assert_array_equal(eng.take(t), [float(i)])
+        assert eng.stats.n_size_flushes == 1
+
+    def test_forced_flush(self):
+        clock = _FakeClock()
+        eng = self._engine(clock)
+        t = eng.submit(mk_request(0, [9]))
+        eng.flush()
+        np.testing.assert_array_equal(eng.take(t), [9.0])
+        assert eng.stats.n_forced_flushes == 1
+
+
+class TestUserTowerCache:
+    def test_lru_eviction_and_stats(self):
+        cache = UserTowerCache(capacity=2)
+        ka, kb, kc = ((i, b"k%d" % i) for i in range(3))
+        cache.put(ka, np.ones(3))
+        cache.put(kb, np.ones(3) * 2)
+        assert cache.get(ka) is not None           # ka now most-recent
+        cache.put(kc, np.ones(3) * 3)              # evicts kb (LRU)
+        assert cache.get(kb) is None
+        assert cache.get(ka) is not None
+        assert cache.stats.evictions == 1
+        assert cache.stats.hits == 2 and cache.stats.misses == 1
+
+    def test_key_tracks_ro_payload_only(self):
+        a = mk_request(1, [1, 2, 3])
+        b = mk_request(1, [7, 8])                  # same RO side, new items
+        assert request_key(a) == request_key(b)
+        c = dataclasses.replace(a, history_ids=[9, 9, 9])
+        assert request_key(a) != request_key(c)    # history change = miss
+        d = mk_request(2, [1, 2, 3])
+        assert request_key(a) != request_key(d)
+
+    def test_invalidate_user(self):
+        cache = UserTowerCache(capacity=8)
+        cache.put((1, b"x"), np.ones(2))
+        cache.put((1, b"y"), np.ones(2))
+        cache.put((2, b"z"), np.ones(2))
+        assert cache.invalidate_user(1) == 2
+        assert len(cache) == 1
+
+    def test_cached_scores_match_uncached(self):
+        # split entry points over pure jnp ops (no model init — fast):
+        # user side = row mean of ro_dense; score = fanout(user) * item_id
+        def user_fn(params, batch):
+            return jnp.mean(batch.ro_dense, axis=-1, keepdims=True)
+
+        def from_user_fn(params, batch, u):
+            return fanout(u, batch.segment_ids)[:, 0] * \
+                batch.item_ids.astype(jnp.float32)
+
+        def fused_fn(params, batch):
+            return from_user_fn(params, batch, user_fn(params, batch))
+
+        reqs = [mk_request(i % 3, [10 * i + j for j in range(1 + i % 3)])
+                for i in range(12)]
+        plain = ROOServer(None, fused_fn, ServeConfig(b_ro=4, b_nro=8))
+        cached = ROOServer(None, fused_fn,
+                           ServeConfig(b_ro=4, b_nro=8, cache_user_tower=True),
+                           user_fn=user_fn, score_from_user=from_user_fn)
+        want = plain.score_requests(reqs)
+        got1 = cached.score_requests(reqs)
+        got2 = cached.score_requests(reqs)          # repeat traffic: all hits
+        for w, g1, g2 in zip(want, got1, got2):
+            np.testing.assert_allclose(g1, w, rtol=1e-6)
+            np.testing.assert_allclose(g2, w, rtol=1e-6)
+        assert cached.cache.stats.hits > 0
+        assert cached.stats.n_full_cache_batches > 0   # user tower skipped
+
+    def test_cache_requires_split_entry_points(self):
+        with pytest.raises(ValueError):
+            ScoringEngine(None, echo_score_fn, cache=UserTowerCache(4))
+
+    def test_put_copies_rows(self):
+        cache = UserTowerCache(capacity=4)
+        big = np.ones((64, 8), np.float32)
+        cache.put((1, b"k"), big[3])               # a view into `big`
+        row = cache.get((1, b"k"))
+        assert row.base is None                    # owns its memory
+        big[3] = 0.0
+        np.testing.assert_array_equal(row, 1.0)    # unaffected by the source
+
+    def test_params_swap_clears_cache(self):
+        def user_fn(params, batch):
+            return jnp.mean(batch.ro_dense, axis=-1, keepdims=True) + params
+
+        def from_user_fn(params, batch, u):
+            return fanout(u, batch.segment_ids)[:, 0]
+
+        def fused_fn(params, batch):
+            return from_user_fn(params, batch, user_fn(params, batch))
+
+        reqs = [mk_request(i, [i]) for i in range(4)]
+        server = ROOServer(jnp.asarray(0.0), fused_fn,
+                           ServeConfig(b_ro=4, b_nro=8, cache_user_tower=True),
+                           user_fn=user_fn, score_from_user=from_user_fn)
+        base = server.score_requests(reqs)
+        server.params = jnp.asarray(100.0)         # weight refresh
+        assert len(server.cache) == 0              # stale rows dropped
+        fresh = server.score_requests(reqs)
+        np.testing.assert_allclose(
+            np.concatenate(fresh), np.concatenate(base) + 100.0, rtol=1e-6)

@@ -148,6 +148,35 @@ class TestPreemptionResume:
                                    rtol=1e-6)
 
 
+class TestGradAccumRng:
+    """Regression: the grad-accumulation scan reused ONE rng for every
+    microbatch, so dropout/sampling were identical across microbatches."""
+
+    def test_microbatches_see_distinct_rng(self):
+        from repro.train.loop import make_train_step
+
+        def loss_fn(params, batch, rng):
+            # gradient wrt w IS the rng draw — exposes rng reuse directly
+            return params["w"] * jax.random.uniform(rng, ())
+
+        m = 4
+        rng = jax.random.PRNGKey(123)
+        step = make_train_step(loss_fn, sgd(lr=0.0), microbatches=m)
+        params = {"w": jnp.asarray(1.0)}
+        state = {"params": params, "opt": sgd(lr=0.0).init(params),
+                 "step": jnp.asarray(0)}
+        batch = {"x": jnp.zeros((m, 1))}
+        _, metrics = step(state, batch, rng)
+
+        draws = np.array([float(jax.random.uniform(
+            jax.random.fold_in(rng, i), ())) for i in range(m)])
+        reused = float(jax.random.uniform(rng, ()))
+        got = float(metrics["grad_norm"])   # |mean of per-microbatch draws|
+        assert abs(got - draws.mean()) < 1e-5
+        assert abs(got - reused) > 1e-4     # the old (buggy) value
+        assert abs(float(metrics["loss"]) - draws.mean()) < 1e-5
+
+
 class TestCompression:
     def test_error_feedback_unbiased(self):
         """Sum of transported grads + residual == sum of true grads."""
