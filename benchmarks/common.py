@@ -1,9 +1,14 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import json
 import time
+from typing import List, Optional
 
 import jax
+
+# rows collected by emit() for the optional --json artifact (run.py)
+_ROWS: List[dict] = []
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -23,6 +28,17 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+    _ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                  "derived": derived})
+
+
+def write_json(path: Optional[str]) -> None:
+    """Dump every emitted row as a JSON artifact (CI uploads this)."""
+    if not path:
+        return
+    with open(path, "w") as f:
+        json.dump({"rows": _ROWS}, f, indent=1)
+    print(f"# wrote {len(_ROWS)} rows to {path}", flush=True)
 
 
 def make_dataset(n_requests=400, product="product_a", seed=0,

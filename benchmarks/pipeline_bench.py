@@ -1,0 +1,148 @@
+"""Request-log pipeline benchmark: real stored bytes + prefetch throughput.
+
+Two quantities, both measured on REAL artifacts (not modeled):
+
+  pipeline_storage_*   — bytes of actual on-disk shard files, request-level
+                         (ROO, dedup pools) vs impression-level (Table 1,
+                         RO payloads duplicated per row). The ratio is the
+                         disk-backed analogue of Table 4.
+  pipeline_prefetch    — steps/s of a real `Trainer.run` over the shard
+                         directory with the background prefetch thread on
+                         vs off (same shards, same batches, same model).
+                         The speedup is the InTune-style input-bound gap
+                         the async loader closes.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import jax
+
+from benchmarks.common import emit
+
+
+def _build_shards(tmp: str, n_requests: int):
+    from repro.core.joiner import expand_roo_samples
+    from repro.data.events import EventSimulator, EventStreamConfig
+    from repro.data.storage import encode_impression_shard
+    from repro.pipeline import (OnlineJoinConfig, WatermarkJoiner,
+                                write_samples)
+    cfg = EventStreamConfig(n_requests=n_requests, product="product_b",
+                            hist_init_max=60, seed=0)
+    joiner = WatermarkJoiner(OnlineJoinConfig(label_wait_s=600.0))
+    samples = joiner.join(EventSimulator(cfg).stream())
+
+    roo_dir = os.path.join(tmp, "roo")
+    manifest = write_samples(roo_dir, samples, requests_per_shard=128)
+    roo_bytes = sum(
+        os.path.getsize(os.path.join(roo_dir, s.filename))
+        for s in manifest.shards)
+
+    # impression-level baseline: same data, RO duplicated per impression,
+    # written with the same codec/compression as real shard files. Rows are
+    # shuffled for the same reason storage_volume.py shuffles: production
+    # warm storage interleaves millions of users, so a request's duplicate
+    # RO rows are not adjacent and zlib can't collapse them for free.
+    import random
+    imp_dir = os.path.join(tmp, "imp")
+    os.makedirs(imp_dir, exist_ok=True)
+    imp = expand_roo_samples(samples)
+    random.Random(0).shuffle(imp)
+    imp_bytes = 0
+    per_shard = 128 * max(1, len(imp) // max(len(samples), 1))
+    for i in range(0, len(imp), per_shard):
+        blob = encode_impression_shard(imp[i:i + per_shard])
+        path = os.path.join(imp_dir, f"shard_{i // per_shard:06d}.imps")
+        with open(path, "wb") as f:
+            f.write(blob)
+        imp_bytes += os.path.getsize(path)
+
+    return roo_dir, manifest, joiner.stats, roo_bytes, imp_bytes, len(imp)
+
+
+def _make_step(rng):
+    """One shared jit'd train step (same compile for both loader modes)."""
+    from repro.configs import roo_models as rm
+    from repro.models.lsr import lsr_init, lsr_loss
+    from repro.train.loop import make_train_step
+    from repro.train.optim import adam
+    cfg = rm.lsr_config("userarch_hstu")
+    params = lsr_init(rng, cfg)
+    opt = adam(1e-3)
+    step_fn = make_train_step(lambda p, b, r: lsr_loss(p, cfg, b), opt)
+    state = {"params": params, "opt": opt.init(params),
+             "step": jax.numpy.zeros((), jax.numpy.int32)}
+    return step_fn, state
+
+
+def _train_steps_per_s(shard_dir: str, step_fn, state, rng,
+                       prefetch: bool, steps: int, warmup: int = 3) -> float:
+    from repro.data.batcher import BatcherConfig
+    from repro.pipeline import PrefetchLoader, ShardDataset
+    loader = PrefetchLoader(
+        ShardDataset(shard_dir, BatcherConfig(b_ro=32, b_nro=192,
+                                              hist_len=64)),
+        prefetch=prefetch)
+    it = loader.batches()
+    try:
+        for _ in range(warmup):                # compile + queue spin-up
+            batch, _ = next(it)
+            state, metrics = step_fn(state, batch, rng)
+        jax.block_until_ready(metrics["loss"])
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            batch, _ = next(it)
+            state, metrics = step_fn(state, batch, rng)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+    finally:
+        it.close()                             # stop the prefetch thread
+    return steps / dt
+
+
+def run(smoke: bool = False) -> None:
+    n_requests = 200 if smoke else 600
+    steps = 20 if smoke else 60
+    tmp = tempfile.mkdtemp(prefix="roo_pipeline_bench_")
+    try:
+        t0 = time.perf_counter()
+        (roo_dir, manifest, join_stats, roo_bytes, imp_bytes,
+         n_imp) = _build_shards(tmp, n_requests)
+        us = (time.perf_counter() - t0) * 1e6
+        ratio = imp_bytes / max(roo_bytes, 1)
+        dedup_saved = sum(s.ro_dedup_saved for s in manifest.shards)
+        emit("pipeline_storage_bytes", us,
+             f"roo_shard_bytes={roo_bytes};imp_shard_bytes={imp_bytes};"
+             f"stored_bytes_ratio={ratio:.2f};"
+             f"n_requests={manifest.n_requests};n_impressions={n_imp};"
+             f"ro_dedup_rows_saved={dedup_saved};"
+             f"label_completeness={join_stats.label_completeness:.3f}")
+
+        rng = jax.random.PRNGKey(0)
+        step_fn, state = _make_step(rng)
+        # interleave the two modes and take medians: single-shot runs are
+        # ±5% noisy on shared hosts. Note: on a CPU-only host the XLA step
+        # itself saturates the cores, so the overlap win is bounded; the
+        # gap opens when the step runs on an accelerator.
+        reps_off, reps_on = [], []
+        for _ in range(2 if smoke else 3):
+            reps_off.append(_train_steps_per_s(
+                roo_dir, step_fn, state, rng, prefetch=False, steps=steps))
+            reps_on.append(_train_steps_per_s(
+                roo_dir, step_fn, state, rng, prefetch=True, steps=steps))
+        sps_off = sorted(reps_off)[len(reps_off) // 2]
+        sps_on = sorted(reps_on)[len(reps_on) // 2]
+        emit("pipeline_prefetch", 1e6 / sps_on,
+             f"prefetch_on_steps_per_s={sps_on:.2f};"
+             f"prefetch_off_steps_per_s={sps_off:.2f};"
+             f"speedup={sps_on / sps_off:.2f}x;steps={steps};"
+             f"device={jax.devices()[0].platform}")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in __import__("sys").argv[1:])

@@ -2,7 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV rows:
   table3_join_quality_*    — Table 3 label-mismatch rates
-  table4_storage_*         — Table 4 sample-volume increase
+  joiner_watermark_*       — online watermark joiner: label completeness vs
+                             freshness under late-conversion sweeps
+  table4_storage_*         — Table 4 sample-volume increase (modeled bytes)
+  pipeline_storage_*       — real on-disk shard bytes, ROO vs impression
+  pipeline_prefetch        — async prefetch loader on/off steps-per-second
   table5_throughput_*      — Table 5 ROO vs impression training throughput
   table6_retrieval_flops   — Table 6 relative FLOPs/example
   seq_amortization_*       — §3.3 encoder amortization (9.82x example)
@@ -11,28 +15,39 @@ Prints ``name,us_per_call,derived`` CSV rows:
   serving_*                — serving engine QPS/p50/p99 per regime,
                              user-tower cache on vs off (docs/SERVING.md)
 
-``--smoke`` runs the fast kernel micro-benchmark and the serving benchmark
-at reduced scale — the tier-1 perf gate wired into scripts/check.sh.
+``--smoke`` runs the kernel, serving, and pipeline benchmarks at reduced
+scale — the tier-1 perf gate wired into scripts/check.sh. ``--json PATH``
+additionally writes every emitted row to a JSON file (the CI artifact).
 """
-import sys
+import argparse
 
 
 def main() -> None:
-    smoke = "--smoke" in sys.argv[1:]
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write emitted rows to this JSON file")
+    args = ap.parse_args()
+    smoke, json_path = args.smoke, args.json
+    from benchmarks.common import write_json
     print("name,us_per_call,derived")
-    from benchmarks import hstu_kernel, serving
-    hstu_kernel.run(smoke=smoke)
-    serving.run(smoke=smoke)
-    if smoke:
-        return
-    from benchmarks import (join_quality, retrieval_flops, roofline,
-                            seq_amortization, storage_volume, throughput)
-    storage_volume.run()
-    join_quality.run()
-    throughput.run()
-    retrieval_flops.run()
-    seq_amortization.run()
-    roofline.run()
+    try:
+        from benchmarks import hstu_kernel, pipeline_bench, serving
+        hstu_kernel.run(smoke=smoke)
+        serving.run(smoke=smoke)
+        pipeline_bench.run(smoke=smoke)
+        if smoke:
+            return
+        from benchmarks import (join_quality, retrieval_flops, roofline,
+                                seq_amortization, storage_volume, throughput)
+        storage_volume.run()
+        join_quality.run()
+        throughput.run()
+        retrieval_flops.run()
+        seq_amortization.run()
+        roofline.run()
+    finally:
+        write_json(json_path)
 
 
 if __name__ == "__main__":

@@ -14,5 +14,5 @@ export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 tests =="
 python -m pytest -x -q "$@"
 
-echo "== kernel smoke benchmark =="
-python benchmarks/run.py --smoke
+echo "== kernel/serving/pipeline smoke benchmark =="
+python benchmarks/run.py --smoke --json bench_smoke.json

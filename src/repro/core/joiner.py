@@ -74,6 +74,26 @@ class _RequestJoinRecord:
     engagement_count: int = 0
 
 
+def record_to_sample(rec: "_RequestJoinRecord",
+                     label_keys: Tuple[str, ...]) -> ROOSample:
+    """Close a join record into a ROOSample (shared by the batch Algorithm-1
+    joiner below and the online watermark joiner in repro/pipeline/joiner.py;
+    missing feedback defaults every label key to 0.0 in both)."""
+    items = list(rec.impressions)
+    labels = []
+    for it in items:
+        lab = rec.conversions.get(it, {})
+        labels.append({k: float(lab.get(k, 0.0)) for k in label_keys})
+    return ROOSample(
+        request_id=rec.request_id, user_id=rec.user_id,
+        ro_dense=rec.ro_dense, ro_idlist=rec.ro_idlist,
+        history_ids=rec.history_ids, history_actions=rec.history_actions,
+        item_ids=items,
+        item_dense=[rec.item_dense[i] for i in items],
+        item_idlist=[rec.item_idlist[i] for i in items],
+        labels=labels)
+
+
 class RequestLevelJoiner:
     """Streaming request-level joiner (Algorithm 1).
 
@@ -95,21 +115,8 @@ class RequestLevelJoiner:
 
     # -- window management -----------------------------------------------------
     def _close(self, rec: _RequestJoinRecord, now_ts: float) -> ROOSample:
-        items = list(rec.impressions)
-        labels = []
-        for it in items:
-            lab = rec.conversions.get(it, {})
-            labels.append({k: float(lab.get(k, 0.0)) for k in self.label_keys})
-        sample = ROOSample(
-            request_id=rec.request_id, user_id=rec.user_id,
-            ro_dense=rec.ro_dense, ro_idlist=rec.ro_idlist,
-            history_ids=rec.history_ids, history_actions=rec.history_actions,
-            item_ids=items,
-            item_dense=[rec.item_dense[i] for i in items],
-            item_idlist=[rec.item_idlist[i] for i in items],
-            labels=labels)
         self.window_close_lag_s.append(max(0.0, now_ts - rec.open_ts))
-        return sample
+        return record_to_sample(rec, self.label_keys)
 
     def _flush_if_needed(self, user_id: int, request_id: Optional[int],
                          ts: float) -> Iterator[ROOSample]:

@@ -68,6 +68,13 @@ class EventStreamConfig:
     item_idlist_max: int = 4
     latent_dim: int = 16
     feedback_delay_mean_s: float = 240.0   # conversions trail impressions
+    # late-conversion tail: with probability ``late_fraction`` a conversion's
+    # delay gets an extra exponential(late_delay_mean_s) draw — the heavy
+    # tail that makes joiner watermark/label-wait behavior testable
+    # (benchmarks/join_quality.py sweeps it). When 0.0 (default) NO extra
+    # rng draws happen, so existing seeds produce bit-identical streams.
+    late_fraction: float = 0.0
+    late_delay_mean_s: float = 3600.0
     request_gap_s: float = 30.0
     hist_init_max: int = 0     # seed users with random-length prior histories
     item_zipf: float = 0.0     # >0: Zipf-like item popularity (hot heads)
@@ -150,6 +157,9 @@ class EventSimulator:
                 click = int(self.rng.rand() < 1.0 / (1.0 + np.exp(-logit)))
                 view = float(np.exp(self.rng.normal(2.0, 0.5))) if click else 0.0
                 delay = self.rng.exponential(cfg.feedback_delay_mean_s)
+                if cfg.late_fraction > 0.0 \
+                        and self.rng.rand() < cfg.late_fraction:
+                    delay += self.rng.exponential(cfg.late_delay_mean_s)
                 pending.append(ConversionEvent(
                     ts=ts + delay, user_id=user, request_id=req, item_id=item,
                     labels={"click": float(click), "view_sec": view}))

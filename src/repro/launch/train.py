@@ -5,8 +5,15 @@ the assigned recsys archs at reduced scale) this runs REAL training on the
 local host. For LM/GNN archs it trains the reduced smoke config — the full
 configs are exercised via launch/dryrun.py (ShapeDtypeStruct only).
 
+Recsys archs can train from the disk-backed request-log pipeline
+(``--data disk``): events -> watermark online join -> on-disk ROO shards ->
+async prefetching loader, with the (shard, offset) cursor checkpointed next
+to the model state so a killed run resumes bit-identically.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch roo-lsr --steps 200
+  PYTHONPATH=src python -m repro.launch.train --arch roo-lsr --steps 200 \
+      --data disk --shard-dir /tmp/roo_shards --ckpt-dir /tmp/roo_ckpt
   PYTHONPATH=src python -m repro.launch.train --arch dien --steps 50
   PYTHONPATH=src python -m repro.launch.train --arch starcoder2-15b --steps 20
 """
@@ -67,6 +74,21 @@ def main() -> None:
                              "jnp-dense"),
                     help="HSTU attention backend (default: auto — fused "
                          "Pallas kernel on TPU, chunked jnp elsewhere)")
+    ap.add_argument("--data", default="memory", choices=("memory", "disk"),
+                    help="recsys data path: in-memory batches (default) or "
+                         "the disk-backed shard pipeline with prefetch + "
+                         "cursor resume")
+    ap.add_argument("--shard-dir", default="/tmp/roo_shards",
+                    help="shard directory for --data disk (reused if a "
+                         "manifest already exists)")
+    ap.add_argument("--requests-per-shard", type=int, default=256)
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="disable the background prefetch thread "
+                         "(synchronous shard reads; benchmarking aid)")
+    ap.add_argument("--label-wait", type=float, default=600.0,
+                    help="online-join label wait window (seconds)")
+    ap.add_argument("--late-fraction", type=float, default=0.0,
+                    help="fraction of conversions given a heavy-tail delay")
     args = ap.parse_args()
     if args.attn_backend:
         from repro.kernels.dispatch import set_default_backend
@@ -135,23 +157,13 @@ def main() -> None:
         return
 
     # recsys: real data pipeline + real training
-    from repro.core.joiner import RequestLevelJoiner
-    from repro.data.batcher import BatcherConfig, ROOBatcher
+    from repro.data.batcher import BatcherConfig
     from repro.data.events import EventSimulator, EventStreamConfig
     params, loss_fn = _recsys_loss(args.arch, rng)
-    samples = RequestLevelJoiner().join(list(EventSimulator(
-        EventStreamConfig(n_requests=800, n_items=50000,
-                          hist_init_max=48, seed=0)).stream()))
-    batches = list(ROOBatcher(BatcherConfig(
-        b_ro=args.b_ro, b_nro=args.b_nro, hist_len=64)).batches(samples))
-
-    def batch_iter(start):
-        def gen():
-            i = start
-            while True:
-                yield batches[i % len(batches)]
-                i += 1
-        return gen()
+    batcher_cfg = BatcherConfig(b_ro=args.b_ro, b_nro=args.b_nro, hist_len=64)
+    stream_cfg = EventStreamConfig(n_requests=800, n_items=50000,
+                                   hist_init_max=48, seed=0,
+                                   late_fraction=args.late_fraction)
 
     opt = make_mixed(adam(1e-3), rowwise_adagrad(0.05), default_is_embedding)
     trainer = Trainer(loss_fn, opt,
@@ -159,7 +171,60 @@ def main() -> None:
                                       ckpt_dir=args.ckpt_dir, ckpt_every=100),
                       lambda: params)
     t0 = time.time()
-    state = trainer.run(batch_iter, rng)
+    if args.data == "disk":
+        import os
+
+        from repro.pipeline import (OnlineJoinConfig, WatermarkJoiner,
+                                    load_manifest, make_data_source,
+                                    write_samples)
+        import dataclasses as _dc
+        provenance = {"stream": _dc.asdict(stream_cfg),
+                      "label_wait_s": args.label_wait,
+                      "requests_per_shard": args.requests_per_shard}
+        try:
+            manifest = load_manifest(args.shard_dir)
+            if manifest.provenance != provenance:
+                raise SystemExit(
+                    f"[pipeline] {args.shard_dir} holds shards built with "
+                    f"different settings:\n  stored:    "
+                    f"{manifest.provenance}\n  requested: {provenance}\n"
+                    f"Pick another --shard-dir or delete the old one.")
+            print(f"[pipeline] reusing {len(manifest.shards)} shard(s) in "
+                  f"{args.shard_dir}")
+        except FileNotFoundError:
+            joiner = WatermarkJoiner(OnlineJoinConfig(
+                label_wait_s=args.label_wait))
+            samples = joiner.join(EventSimulator(stream_cfg).stream())
+            manifest = write_samples(args.shard_dir, samples,
+                                     requests_per_shard=args.requests_per_shard,
+                                     provenance=provenance)
+            st = joiner.stats
+            print(f"[pipeline] joined {st.requests_emitted} requests "
+                  f"(label completeness {st.label_completeness:.3f}, "
+                  f"mean close lag {st.mean_close_lag_s:.0f}s) -> "
+                  f"{len(manifest.shards)} shard(s), "
+                  f"{manifest.n_bytes / 1e6:.2f} MB on disk")
+        cursor_dir = os.path.join(args.ckpt_dir or args.shard_dir, "cursors")
+        source = make_data_source(args.shard_dir, batcher_cfg, cursor_dir,
+                                  prefetch=not args.no_prefetch)
+        state = trainer.run(source.batch_iter_fn, rng,
+                            on_checkpoint=source.on_checkpoint)
+    else:
+        from repro.core.joiner import RequestLevelJoiner
+        from repro.data.batcher import ROOBatcher
+        samples = RequestLevelJoiner().join(
+            list(EventSimulator(stream_cfg).stream()))
+        batches = list(ROOBatcher(batcher_cfg).batches(samples))
+
+        def batch_iter(start):
+            def gen():
+                i = start
+                while True:
+                    yield batches[i % len(batches)]
+                    i += 1
+            return gen()
+
+        state = trainer.run(batch_iter, rng)
     dt = time.time() - t0
     print(f"[{args.arch}] {int(state['step'])} steps in {dt:.1f}s; "
           f"final loss {trainer.history[-1]['loss']:.4f}")

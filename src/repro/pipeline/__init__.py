@@ -1,0 +1,27 @@
+"""Request-log data pipeline: online watermark join -> on-disk ROO shards
+-> async prefetching training loader with a deterministic resume cursor.
+
+Stages (docs/PIPELINE.md has the full architecture):
+
+  events (data/events.py)
+    -> WatermarkJoiner          (pipeline/joiner.py)   bounded-lateness join
+    -> ShardWriter / manifest   (pipeline/shards.py)   columnar ROO shards
+    -> PrefetchLoader           (pipeline/prefetch.py) background decode+pack
+    -> Trainer.run              (pipeline/resume.py)   (shard, offset) cursor
+"""
+from repro.pipeline.joiner import (JoinStats, OnlineJoinConfig,
+                                   WatermarkJoiner)
+from repro.pipeline.prefetch import Cursor, PrefetchLoader, ShardDataset
+from repro.pipeline.resume import (CursorStore, PipelineDataSource,
+                                   make_data_source)
+from repro.pipeline.shards import (ShardInfo, ShardManifest, ShardWriter,
+                                   load_manifest, read_all, read_shard,
+                                   write_samples)
+
+__all__ = [
+    "JoinStats", "OnlineJoinConfig", "WatermarkJoiner",
+    "Cursor", "PrefetchLoader", "ShardDataset",
+    "CursorStore", "PipelineDataSource", "make_data_source",
+    "ShardInfo", "ShardManifest", "ShardWriter",
+    "load_manifest", "read_all", "read_shard", "write_samples",
+]

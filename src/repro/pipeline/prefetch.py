@@ -1,0 +1,178 @@
+"""Async prefetching input loader over on-disk ROO shards.
+
+The InTune observation (arXiv:2308.08500) is that DLRM training is input-
+bound: decode + host-side batch assembly steal step time if they run on the
+training thread. This loader moves them to a background thread:
+
+    [reader thread]  shard file -> decode_roo_shard -> ROOBatcher pack
+                     -> jax.device_put (+ block) -> bounded queue
+    [train  thread]  queue.get()  (already on device, double-buffered)
+
+A queue of depth >= 2 gives double buffering: while step N runs, batch N+1
+is already resident and N+2 is being assembled.
+
+Determinism / resume: shards are read in manifest order; each shard is
+packed independently by a fresh ``ROOBatcher``; so the batch stream is a
+pure function of (manifest, BatcherConfig) and a position in it is the
+``Cursor (epoch, shard, batch)`` — "``batch`` batches of ``shard`` already
+consumed". Every yielded batch comes with the cursor of the *next* batch;
+checkpoint that cursor (pipeline/resume.py) and a restarted loader
+reproduces the remaining stream bit-identically, prefetch on or off.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator, List, Optional, Tuple
+
+import jax
+
+from repro.core.roo_batch import ROOBatch
+from repro.data.batcher import BatcherConfig, ROOBatcher
+from repro.pipeline.shards import (ShardManifest, load_manifest, read_shard)
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Cursor:
+    """Position in the deterministic batch stream (see module docstring)."""
+    epoch: int = 0
+    shard: int = 0
+    batch: int = 0       # batches already consumed from this shard
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(obj: dict) -> "Cursor":
+        return Cursor(epoch=int(obj["epoch"]), shard=int(obj["shard"]),
+                      batch=int(obj["batch"]))
+
+
+class ShardDataset:
+    """Decode + pack one shard at a time (the host-side unit of work)."""
+
+    def __init__(self, shard_dir: str, batcher_cfg: BatcherConfig,
+                 manifest: Optional[ShardManifest] = None):
+        self.shard_dir = shard_dir
+        self.batcher_cfg = batcher_cfg
+        self.manifest = manifest or load_manifest(shard_dir)
+        if not self.manifest.shards:
+            raise ValueError(f"empty shard manifest in {shard_dir}")
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.manifest.shards)
+
+    def shard_batches(self, shard_index: int) -> List[ROOBatch]:
+        samples = read_shard(self.shard_dir,
+                             self.manifest.shards[shard_index])
+        # a fresh batcher per shard: packing must not depend on what was
+        # packed before the shard, or the cursor loses determinism
+        return list(ROOBatcher(self.batcher_cfg).batches(samples))
+
+
+class PrefetchLoader:
+    """Iterate (device_batch, next_cursor) pairs from a shard directory.
+
+    ``prefetch=False`` runs the same stream synchronously on the calling
+    thread — the benchmark baseline and a debugging aid.
+    """
+
+    def __init__(self, dataset: ShardDataset, prefetch: bool = True,
+                 prefetch_depth: int = 3, epochs: Optional[int] = None):
+        assert prefetch_depth >= 1
+        self.dataset = dataset
+        self.prefetch = prefetch
+        self.prefetch_depth = prefetch_depth
+        self.epochs = epochs          # None = cycle forever (training)
+
+    # -- the deterministic host-side stream -------------------------------------
+    def _host_stream(self, start: Cursor, skip_batches: int = 0
+                     ) -> Iterator[Tuple[ROOBatch, Cursor]]:
+        """Stream from ``start``; the first ``skip_batches`` batches are
+        dropped here, host-side, before any device transfer happens (the
+        cursor-miss replay fallback in pipeline/resume.py)."""
+        n_shards = self.dataset.n_shards
+        epoch, shard, skip = start.epoch, start.shard, start.batch
+        if shard >= n_shards:
+            epoch, shard, skip = epoch + 1, 0, 0
+        while self.epochs is None or epoch < self.epochs:
+            packed = self.dataset.shard_batches(shard)
+            if skip >= len(packed) > 0:
+                # cursors we emit always satisfy batch < len(packed); an
+                # out-of-range value means the shards or the batcher config
+                # changed under the cursor — fail loudly, don't misalign
+                raise ValueError(
+                    f"resume cursor batch={skip} out of range for shard "
+                    f"{shard} ({len(packed)} batches) — shard contents or "
+                    f"batcher config changed since the cursor was saved")
+            for i in range(skip, len(packed)):
+                if i + 1 < len(packed):
+                    nxt = Cursor(epoch, shard, i + 1)
+                elif shard + 1 < n_shards:
+                    nxt = Cursor(epoch, shard + 1, 0)
+                else:
+                    nxt = Cursor(epoch + 1, 0, 0)
+                if skip_batches > 0:
+                    skip_batches -= 1
+                    continue
+                yield packed[i], nxt
+            skip = 0
+            shard += 1
+            if shard >= n_shards:
+                shard = 0
+                epoch += 1
+
+    # -- iteration ----------------------------------------------------------------
+    def batches(self, start: Cursor = Cursor(), skip_batches: int = 0
+                ) -> Iterator[Tuple[ROOBatch, Cursor]]:
+        if not self.prefetch:
+            for batch, nxt in self._host_stream(start, skip_batches):
+                yield jax.block_until_ready(jax.device_put(batch)), nxt
+            return
+        yield from self._prefetch_iter(start, skip_batches)
+
+    def _prefetch_iter(self, start: Cursor, skip_batches: int = 0
+                       ) -> Iterator[Tuple[ROOBatch, Cursor]]:
+        q: "queue.Queue" = queue.Queue(maxsize=self.prefetch_depth)
+        stop = threading.Event()
+        _END = object()
+
+        def _produce() -> None:
+            try:
+                for batch, nxt in self._host_stream(start, skip_batches):
+                    item = (jax.block_until_ready(jax.device_put(batch)),
+                            nxt)
+                    while not stop.is_set():
+                        try:
+                            q.put(item, timeout=0.1)
+                            break
+                        except queue.Full:
+                            continue
+                    if stop.is_set():
+                        return
+                q.put(_END)
+            except BaseException as e:               # surface in consumer
+                if not stop.is_set():
+                    q.put(e)
+
+        thread = threading.Thread(target=_produce, daemon=True,
+                                  name="roo-prefetch")
+        thread.start()
+        try:
+            while True:
+                item = q.get()
+                if item is _END:
+                    return
+                if isinstance(item, BaseException):
+                    raise item
+                yield item
+        finally:
+            stop.set()
+            # unblock a producer stuck on a full queue
+            try:
+                while True:
+                    q.get_nowait()
+            except queue.Empty:
+                pass

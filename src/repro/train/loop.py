@@ -4,12 +4,18 @@ straggler-aware deterministic data skipping.
 The loop is model-agnostic: it takes ``loss_fn(params, batch, rng)`` and an
 Optimizer. Fault tolerance contract:
   * state = {params, opt, step, rng} checkpointed every ``ckpt_every`` steps
-    (async, atomic);
+    (async, atomic). ``rng`` is the run's base key: the per-step key is
+    ``fold_in(rng, step)``, and because the base key is part of the
+    checkpointed state a resumed run continues bit-identically even if the
+    caller passes a different ``rng`` argument to ``run()``;
   * on (re)start, ``run()`` restores the newest committed step and fast-
     forwards the data iterator deterministically (iterator seeded by step),
-    so a preempted-and-restarted run continues exactly;
-  * simulated-failure test: tests/test_train_integration.py kills the loop
-    mid-run and verifies bit-continuation.
+    so a preempted-and-restarted run continues exactly. Disk-backed loaders
+    hook ``on_checkpoint(step)`` to persist their (shard, offset) cursor at
+    exactly the committed steps (repro/pipeline/resume.py);
+  * simulated-failure tests: TestPreemptionResume (tests/test_train.py)
+    and the pipeline kill-and-restart test (tests/test_pipeline.py) kill
+    the loop mid-run and verify bit-continuation.
 """
 from __future__ import annotations
 
@@ -65,7 +71,8 @@ def make_train_step(loss_fn: Callable, opt: Optimizer,
         new_params, new_opt = opt.update(grads, state["opt"], params)
         gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
                              for g in jax.tree.leaves(grads)) + 1e-20)
-        new_state = {"params": new_params, "opt": new_opt,
+        # {**state, ...} carries pass-through keys (e.g. the base "rng")
+        new_state = {**state, "params": new_params, "opt": new_opt,
                      "step": state["step"] + 1}
         return new_state, {"loss": loss, "grad_norm": gnorm}
 
@@ -85,28 +92,37 @@ class Trainer:
                      if cfg.ckpt_dir else None)
         self.history: list = []
 
-    def init_state(self) -> Dict:
+    def init_state(self, rng: Optional[jax.Array] = None) -> Dict:
         params = self.init_params_fn()
-        return {"params": params, "opt": self.opt.init(params),
-                "step": jnp.zeros((), jnp.int32)}
+        state = {"params": params, "opt": self.opt.init(params),
+                 "step": jnp.zeros((), jnp.int32)}
+        if rng is not None:
+            state["rng"] = rng
+        return state
 
     def run(self, batch_iter_fn: Callable[[int], Iterator],
-            rng: jax.Array, stop_after: Optional[int] = None) -> Dict:
+            rng: jax.Array, stop_after: Optional[int] = None,
+            on_checkpoint: Optional[Callable[[int], None]] = None) -> Dict:
         """batch_iter_fn(start_step) must yield batches from that step on
-        (the deterministic-skip contract)."""
+        (the deterministic-skip contract). ``on_checkpoint(step)`` fires at
+        every committed checkpoint so data sources can persist their resume
+        cursor for exactly that step."""
         state = None
         start = 0
         if self.ckpt is not None and self.ckpt.latest_step() is not None:
             state = self.ckpt.restore()
             start = int(state["step"])
+            # pre-rng checkpoints: adopt the caller's key (old behavior)
+            state.setdefault("rng", rng)
         if state is None:
-            state = self.init_state()
+            state = self.init_state(rng)
+        base_rng = jnp.asarray(state["rng"])   # checkpointed base key wins
         it = batch_iter_fn(start)
         t0 = time.time()
         for step in range(start, self.cfg.total_steps):
             batch = next(it)
             state, metrics = self.step_fn(state, batch,
-                                          jax.random.fold_in(rng, step))
+                                          jax.random.fold_in(base_rng, step))
             if (step + 1) % self.cfg.log_every == 0:
                 loss = float(metrics["loss"])
                 rate = (step + 1 - start) / max(time.time() - t0, 1e-9)
@@ -114,6 +130,8 @@ class Trainer:
                                      "steps_per_s": rate})
             if self.ckpt is not None and (step + 1) % self.cfg.ckpt_every == 0:
                 self.ckpt.save(int(state["step"]), state, blocking=False)
+                if on_checkpoint is not None:
+                    on_checkpoint(int(state["step"]))
             if stop_after is not None and (step + 1 - start) >= stop_after:
                 break   # simulated preemption (tests)
         if self.ckpt is not None:
