@@ -1,0 +1,158 @@
+"""Perf regression gate: compare a bench_smoke.json run against the
+committed baseline (benchmarks/baseline_smoke.json) and fail on regression.
+
+    python benchmarks/compare.py benchmarks/baseline_smoke.json \
+        bench_smoke.json [--max-regress 0.20] [--absolute]
+
+A row regresses when its ``us_per_call`` grows more than ``--max-regress``
+(default 20%, env BENCH_MAX_REGRESS overrides) relative to baseline.
+
+By default the comparison is *machine-normalized per benchmark family*
+(the row-name prefix: ``hstu...``, ``serving...``, ``pipeline...``): each
+row's cur/base ratio is divided by the median ratio of its family
+*siblings* (leave-one-out, so a row's own regression cannot dilute its
+own yardstick — with self-inclusion a 2-row family would tolerate ~49%).
+Rationale: on shared/cpu-share-throttled hosts the slowdown is not
+uniform — macro serving rows swing 40-60% with host load while min-of-N
+kernel timings barely move — so a single global norm misfires, while
+within a family the noise IS common-mode. Whole-family regressions
+(every serving row slower because the engine got slower) are caught by a
+second, coarser gate: a family's median ratio may not exceed the median
+of the *other* families (again leave-one-out — the largest family can't
+drag the global yardstick with it) by ``--max-group-regress`` (default
+100% — above any host-load swing we've measured, well below a real 2.5x
+subsystem regression). ``--absolute`` compares raw wall times
+(same-machine, idle-box use).
+
+Rows present in the baseline but missing from the current run fail the
+gate too: losing a benchmark silently is itself a regression.
+
+The committed baseline is the element-wise median of 3 clean runs; every
+gated ``us_per_call`` is a min/p50-style estimator (see common.time_fn) so
+residual run-to-run noise sits well inside the 20% band. To regenerate
+after an intentional perf change (or a structurally different runner):
+run ``benchmarks/run.py --smoke --json`` three times and median the rows,
+or copy one clean ``bench_smoke.json`` over the baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in data["rows"]
+            if float(r.get("us_per_call", 0)) > 0}
+
+
+def median(xs):
+    xs = sorted(xs)
+    n = len(xs)
+    return xs[n // 2] if n % 2 else 0.5 * (xs[n // 2 - 1] + xs[n // 2])
+
+
+def family(name: str) -> str:
+    """Benchmark family = first underscore token ('serving', 'pipeline',
+    'hstu'), the unit that shares a noise profile."""
+    return name.split("_", 1)[0]
+
+
+def compare(base: dict, cur: dict, max_regress: float,
+            absolute: bool = False, max_group_regress: float = 1.0):
+    """Returns (report_lines, failures). Pure so tests can call it."""
+    common = sorted(set(base) & set(cur))
+    missing = sorted(set(base) - set(cur))
+    lines, failures = [], []
+    if not common:
+        return ["no common rows between baseline and current run"], \
+            ["no common rows"]
+    ratios = {n: cur[n] / base[n] for n in common}
+    fam_rows = {}
+    for name in common:
+        fam_rows.setdefault(family(name), []).append(name)
+    fam_norm = {f: median(ratios[n] for n in rows)
+                for f, rows in fam_rows.items()}
+    lines.append("normalization: " + ("absolute" if absolute else ", ".join(
+        f"{f} x{r:.3f}" for f, r in sorted(fam_norm.items()))))
+    # coarse gate: a whole family regressing vs the OTHER families
+    # (leave-one-out: the largest family must not be its own yardstick)
+    if not absolute:
+        for f in sorted(fam_rows):
+            others = [ratios[n] for n in common if family(n) != f]
+            if not others:
+                continue
+            rel = fam_norm[f] / median(others) - 1.0
+            if rel > max_group_regress:
+                failures.append(f"family {f}: {rel * 100:+.1f}% vs the rest "
+                                f"of the suite (whole-subsystem regression)")
+                lines.append(f"family {f:37s} {rel * 100:+6.1f}% vs others  "
+                             f"<< REGRESSION")
+
+    def row_norm(name: str) -> float:
+        """Leave-one-out sibling median: the row being judged never sits
+        on its own yardstick."""
+        if absolute:
+            return 1.0
+        siblings = [ratios[n] for n in fam_rows[family(name)] if n != name]
+        if not siblings:
+            siblings = [ratios[n] for n in common if n != name] or [1.0]
+        return median(siblings)
+
+    for name in common:
+        rel = ratios[name] / row_norm(name) - 1.0
+        flag = ""
+        # a row must ALSO be slower in absolute terms to fail: normalized
+        # excess alone can flag a row that merely sped up less than its
+        # siblings (a real regression on a faster machine still shows
+        # ratio > 1 unless the machine speedup exceeds the regression)
+        if rel > max_regress and ratios[name] > 1.0:
+            flag = "  << REGRESSION"
+            failures.append(f"{name}: {rel * 100:+.1f}% "
+                            f"(base {base[name]:.1f}us -> cur "
+                            f"{cur[name]:.1f}us)")
+        lines.append(f"{name:44s} base {base[name]:>10.1f}us "
+                     f"cur {cur[name]:>10.1f}us  {rel * 100:+6.1f}%{flag}")
+    for name in missing:
+        failures.append(f"{name}: present in baseline, missing from current "
+                        f"run")
+        lines.append(f"{name:44s} MISSING from current run  << REGRESSION")
+    return lines, failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--max-regress", type=float,
+                    default=float(os.environ.get("BENCH_MAX_REGRESS", 0.20)),
+                    help="allowed fractional slowdown per row (default 0.20)")
+    ap.add_argument("--max-group-regress", type=float,
+                    default=float(os.environ.get("BENCH_MAX_GROUP_REGRESS",
+                                                 1.0)),
+                    help="allowed slowdown of a whole benchmark family vs "
+                         "the suite median (default 1.0 = 100%%)")
+    ap.add_argument("--absolute", action="store_true",
+                    help="skip machine normalization (same-machine compare)")
+    args = ap.parse_args()
+    base, cur = load_rows(args.baseline), load_rows(args.current)
+    lines, failures = compare(base, cur, args.max_regress, args.absolute,
+                              args.max_group_regress)
+    print(f"== bench compare: {len(base)} baseline rows, {len(cur)} current, "
+          f"threshold {args.max_regress * 100:.0f}% ==")
+    for ln in lines:
+        print(ln)
+    if failures:
+        print(f"\nFAIL: {len(failures)} regression(s):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("\nOK: no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

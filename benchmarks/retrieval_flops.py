@@ -12,7 +12,6 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit, make_dataset
 from benchmarks.throughput import _batch, _expand_to_impression_level

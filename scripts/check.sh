@@ -5,14 +5,25 @@
 #
 # The smoke benchmark exercises the HSTU attention dispatch backends
 # (fwd + bwd) so perf/correctness regressions in the kernel path are
-# caught locally even when only unit tests were touched.
+# caught locally even when only unit tests were touched; compare.py then
+# gates the result against the committed baseline (>20% per-row slowdown
+# after machine normalization fails the run).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
+
+# lint locally when ruff is around; CI lints in its own named step first
+if [[ -z "${CI:-}" ]] && command -v ruff >/dev/null 2>&1; then
+  echo "== ruff lint =="
+  ruff check src tests benchmarks
+fi
 
 echo "== tier-1 tests =="
 python -m pytest -x -q "$@"
 
 echo "== kernel/serving/pipeline smoke benchmark =="
 python benchmarks/run.py --smoke --json bench_smoke.json
+
+echo "== perf regression gate =="
+python benchmarks/compare.py benchmarks/baseline_smoke.json bench_smoke.json

@@ -9,7 +9,6 @@ Shapes (assigned):
 from __future__ import annotations
 
 import functools
-from typing import Dict
 
 import jax
 import jax.numpy as jnp

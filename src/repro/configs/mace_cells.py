@@ -15,8 +15,6 @@ synthetic 3-D position channel (DESIGN.md §4).
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -13,8 +13,6 @@ row-sharded over `model`; batch tensors shard over the (pod,)data axes.
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
+from typing import List
 
 _MODULES = {
     "starcoder2-15b": "repro.configs.starcoder2_15b",

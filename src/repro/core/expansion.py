@@ -8,7 +8,6 @@ the paper describes (the storage/IO win is kept; the training dedup is not).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

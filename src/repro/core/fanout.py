@@ -13,7 +13,6 @@ shard_map for the optimized path, while plain ``fanout`` relies on GSPMD.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,7 @@ shard-local gather.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

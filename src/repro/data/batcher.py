@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Iterator, List, Optional, Sequence, Tuple
+from typing import Iterator, List, Sequence, Tuple
 
 import numpy as np
 

@@ -16,7 +16,7 @@ Impressions-per-request distributions mimic the paper's three products
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Sequence
+from typing import Dict, Iterator, List
 
 import numpy as np
 

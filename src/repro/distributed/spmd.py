@@ -1,0 +1,215 @@
+"""SPMD training state/batch sharding: the executable half of ShardingPlan.
+
+``distributed/sharding.py`` declares the conventions (megatron TP over
+``model``, FSDP over ``data``, embedding tables row-sharded over ``model``);
+this module turns a concrete pytree of training state into the matching
+pytree of ``NamedSharding``s and places arrays accordingly, so
+``train/loop.py`` can run its jit'd step under a real mesh:
+
+  * ``param_spec``       — path+shape -> PartitionSpec (the single rule both
+    params and optimizer state go through; opt state inherits specs because
+    ``make_mixed`` keeps embedding leaves under an ``emb`` subtree and the
+    rule keys on the same path predicate as the optimizer routing);
+  * ``state_shardings``  — whole-state pytree of NamedShardings;
+  * ``batch_shardings``  — ROOBatch leading dims over the (pod, data) batch
+    axes (jagged value buffers and non-divisible leaves stay replicated —
+    GSPMD keeps the math identical either way);
+  * ``place_state`` / ``place_batch`` / ``make_batch_sharding_fn`` — the
+    ``jax.device_put`` wiring for the trainer and the prefetch loader.
+
+Everything is a no-op under ``replicated_plan()`` so single-device code
+paths never pay for it.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.data.jagged import JaggedTensor
+from repro.distributed.sharding import ShardingPlan
+from repro.train.optim import default_is_embedding
+
+# tables with fewer rows than this stay replicated: sharding a 4-row action
+# vocab over 16 model shards buys nothing and costs a collective
+SHARD_MIN_ROWS = 64
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def data_shard_count(plan: Optional[ShardingPlan]) -> int:
+    """Number of batch shards the plan splits leading dims into (1 when
+    disabled) — batch sizes and the batcher's n_shards must divide it."""
+    if plan is None or not plan.enabled:
+        return 1
+    return _axis_size(plan.mesh, plan.batch_axes)
+
+
+def table_is_sharded(plan: Optional[ShardingPlan], vocab: int) -> bool:
+    """True when the plan row-shards a table of this vocab over ``model``.
+
+    The SAME predicate gates (a) the table's param/opt-state sharding and
+    (b) routing its lookups through the explicit psum path in
+    ``embeddings/sharded.py`` — they must agree or every lookup pays a
+    reshard.
+    """
+    return (plan is not None and plan.enabled and plan.model_axis is not None
+            and vocab >= SHARD_MIN_ROWS
+            and vocab % plan.mesh.shape[plan.model_axis] == 0)
+
+
+def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+               plan: ShardingPlan,
+               is_embedding: Callable = default_is_embedding) -> P:
+    """Sharding rule for one state leaf.
+
+    * embedding tables (path matches the optimizer's embedding predicate):
+      rows over ``model`` (P(model, None, ...)); their 1-D row-wise
+      optimizer accumulators follow (P(model));
+    * dense >=2-D params: dim 0 FSDP-sharded over the plan's fsdp axes,
+      last dim TP-sharded over ``model`` (each only when divisible);
+    * everything else (biases, scalars, rng keys): replicated.
+    """
+    if not plan.enabled or len(shape) == 0:
+        return P()
+    mesh = plan.mesh
+    if is_embedding(path):
+        if table_is_sharded(plan, shape[0]):
+            return P(plan.model_axis, *([None] * (len(shape) - 1)))
+        return P()
+    if len(shape) < 2:
+        return P()
+    entries: list = [None] * len(shape)
+    n_fsdp = _axis_size(mesh, plan.fsdp_axis)
+    if n_fsdp > 1 and shape[0] % n_fsdp == 0:
+        entries[0] = plan.fsdp_axis
+    if plan.model_axis is not None:
+        n_model = mesh.shape[plan.model_axis]
+        if n_model > 1 and shape[-1] % n_model == 0:
+            entries[-1] = plan.model_axis
+    return P(*entries)
+
+
+def state_shardings(state: Any, plan: ShardingPlan,
+                    is_embedding: Callable = default_is_embedding) -> Any:
+    """Pytree of NamedShardings congruent with ``state`` (params, optimizer
+    state, step, rng — anything), or None when the plan is disabled."""
+    if plan is None or not plan.enabled:
+        return None
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+    shardings = []
+    for key_path, leaf in flat:
+        path = tuple(str(k) for k in key_path)
+        spec = param_spec(path, jnp.shape(leaf), plan, is_embedding)
+        shardings.append(NamedSharding(plan.mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def place_state(state: Any, plan: ShardingPlan,
+                is_embedding: Callable = default_is_embedding) -> Any:
+    """device_put the whole training state per plan (identity if disabled)."""
+    shardings = state_shardings(state, plan, is_embedding)
+    if shardings is None:
+        return state
+    return jax.device_put(state, shardings)
+
+
+# ---------------------------------------------------------------------------
+# Batch placement
+# ---------------------------------------------------------------------------
+
+def batch_spec(shape: Tuple[int, ...], plan: ShardingPlan,
+               batch_dim: int = 0) -> P:
+    """Shard a batch leaf's ``batch_dim`` over the batch axes when divisible.
+
+    ROOBatch leading dims are B_RO or B_NRO (both divisible by the data
+    shard count under the batcher's request-locality packing); leaves with
+    non-divisible batch dims replicate. With grad accumulation the leading
+    dim is the microbatch axis the step scans over — pass ``batch_dim=1``
+    so the REAL batch dim shards and the scan axis stays whole.
+    """
+    if not plan.enabled or len(shape) <= batch_dim:
+        return P()
+    n = _axis_size(plan.mesh, plan.batch_axes)
+    if n > 1 and shape[batch_dim] > 0 and shape[batch_dim] % n == 0:
+        entries = [None] * len(shape)
+        entries[batch_dim] = plan.batch_axes
+        return P(*entries)
+    return P()
+
+
+def batch_shardings(batch: Any, plan: ShardingPlan,
+                    batch_dim: int = 0) -> Any:
+    if plan is None or not plan.enabled:
+        return None
+    repl = NamedSharding(plan.mesh, P())
+
+    def leaf(x):
+        if isinstance(x, JaggedTensor):
+            # jagged buffers are packed row-major with no per-row shard
+            # alignment; the psum bag (embeddings/sharded.py) takes them
+            # replicated — splitting values over `data` (whenever capacity
+            # happens to divide) would just buy an all-gather per step
+            return JaggedTensor(values=repl, lengths=repl)
+        return NamedSharding(plan.mesh,
+                             batch_spec(jnp.shape(x), plan, batch_dim))
+
+    return jax.tree.map(leaf, batch,
+                        is_leaf=lambda x: isinstance(x, JaggedTensor))
+
+
+def make_batch_sharding_fn(plan: Optional[ShardingPlan],
+                           batch_dim: int = 0
+                           ) -> Optional[Callable[[Any], Any]]:
+    """batch -> shardings-pytree callable for PrefetchLoader's ``sharding``
+    argument (None when the plan is disabled — loader keeps its default
+    single-device device_put)."""
+    if plan is None or not plan.enabled:
+        return None
+    return lambda batch: batch_shardings(batch, plan, batch_dim)
+
+
+def place_batch(batch: Any, plan: Optional[ShardingPlan],
+                batch_dim: int = 0) -> Any:
+    """device_put one batch per plan (plain device_put when disabled)."""
+    if plan is None or not plan.enabled:
+        return jax.device_put(batch)
+    return jax.device_put(batch, batch_shardings(batch, plan, batch_dim))
+
+
+def make_batch_placer(plan: Optional[ShardingPlan],
+                      batch_dim: int = 0) -> Callable[[Any], Any]:
+    """Per-step batch placement with the shardings pytree cached.
+
+    Batch shapes are constant across a training run (jit would recompile
+    otherwise), so the NamedSharding pytree is built once on first use and
+    reused; the cache re-keys on (treedef, shapes) so a shape change stays
+    correct. device_put on an already-correctly-placed batch (e.g. the
+    prefetch loader got the same sharding fn) is a no-op view.
+    """
+    if plan is None or not plan.enabled:
+        return lambda batch: batch
+    cache: dict = {}
+
+    def place(batch):
+        flat, treedef = jax.tree_util.tree_flatten(batch)
+        key = (treedef, tuple(jnp.shape(x) for x in flat))
+        shardings = cache.get(key)
+        if shardings is None:
+            shardings = batch_shardings(batch, plan, batch_dim)
+            cache.clear()            # one live shape set at a time
+            cache[key] = shardings
+        return jax.device_put(batch, shardings)
+
+    return place

@@ -15,12 +15,11 @@ machinery amounts to under SPMD.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.data.jagged import JaggedTensor
 from repro.distributed.sharding import shard_map
@@ -119,6 +118,146 @@ def sharded_bag_lookup(table: jnp.ndarray, ids: jnp.ndarray,
         fn, mesh=mesh,
         in_specs=(P(model_axis, None), P(batch_axes, None), P(batch_axes)),
         out_specs=P(batch_axes, None))(table, ids, lengths)
+
+
+def sharded_seq_lookup(table: jnp.ndarray, ids: jnp.ndarray, *, mesh: Mesh,
+                       vocab: int, model_axis: str = "model",
+                       batch_axes: Tuple[str, ...] = ("data",)) -> jnp.ndarray:
+    """Row-sharded per-position lookup: (B, L) ids -> (B, L, D) rows.
+
+    The sequence-encoder analogue of ``sharded_bag_lookup`` (no pooling:
+    HSTU consumes every position). Each shard gathers the rows it owns and
+    zeros the rest; the psum over ``model`` reassembles exact ``jnp.take``
+    semantics — ids are pre-clipped to [0, vocab), so every position
+    contributes exactly one shard's row.
+    Collective cost: one (B_local, L, D) psum over ``model`` per call.
+    """
+    def fn(tbl, i):
+        rows = tbl.shape[0]
+        shard_idx = jax.lax.axis_index(model_axis)
+        local = jnp.clip(i, 0, vocab - 1) - shard_idx * rows
+        in_shard = (local >= 0) & (local < rows)
+        emb = jnp.take(tbl, jnp.clip(local, 0, rows - 1).reshape(-1),
+                       axis=0).reshape(i.shape + (tbl.shape[-1],))
+        emb = emb * in_shard[..., None].astype(emb.dtype)
+        return jax.lax.psum(emb, model_axis)
+
+    return shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(model_axis, None), P(batch_axes, None)),
+        out_specs=P(batch_axes, None, None))(table, ids)
+
+
+def sharded_row_lookup(table: jnp.ndarray, ids: jnp.ndarray, *, mesh: Mesh,
+                       vocab: int, model_axis: str = "model",
+                       batch_axes: Tuple[str, ...] = ("data",)) -> jnp.ndarray:
+    """Row-sharded single-id lookup: (B,) ids -> (B, D) rows."""
+    return sharded_seq_lookup(table, ids[:, None], mesh=mesh, vocab=vocab,
+                              model_axis=model_axis,
+                              batch_axes=batch_axes)[:, 0, :]
+
+
+def sharded_jagged_bag_lookup(table: jnp.ndarray, ids: JaggedTensor, *,
+                              mesh: Mesh, vocab: int, pooling: str = "sum",
+                              model_axis: str = "model") -> jnp.ndarray:
+    """Row-sharded bag lookup over a jagged id-list feature.
+
+    The jagged ``values`` buffer is packed row-major with no per-row
+    alignment, so it cannot shard over the data axis; it enters replicated
+    and each model shard computes the partial bags of the rows it owns,
+    psum'd over ``model``. Output: (B, D) replicated — this psum of B·D
+    bytes per call is exactly the RO-side collective the paper's Fig. 3
+    counts (B_RO·D instead of B_NRO·D for user tables). sum/mean only.
+    """
+    if pooling not in ("sum", "mean"):
+        raise ValueError(f"sharded jagged bag supports sum/mean, not {pooling}")
+    b = ids.batch_size
+
+    def fn(tbl, vals, lens):
+        rows = tbl.shape[0]
+        shard_idx = jax.lax.axis_index(model_axis)
+        jt = JaggedTensor(vals, lens)
+        seg = jt.segment_ids()                     # (capacity,), b == padding
+        local = jnp.clip(vals, 0, vocab - 1) - shard_idx * rows
+        valid = (seg < b) & (local >= 0) & (local < rows)
+        emb = jnp.take(tbl, jnp.clip(local, 0, rows - 1), axis=0)
+        emb = emb * valid[:, None].astype(emb.dtype)
+        out = jax.ops.segment_sum(emb, seg, num_segments=b + 1)[:b]
+        out = jax.lax.psum(out, model_axis)
+        if pooling == "mean":
+            out = out / jnp.maximum(lens, 1).astype(out.dtype)[:, None]
+        return out
+
+    # check_vma off: the cumsum inside segment_ids() trips jax<0.5's scan
+    # replication checker even though inputs/outputs are replicated
+    return shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(model_axis, None), P(None), P(None)),
+        out_specs=P(None, None), check_vma=False)(table, ids.values,
+                                                  ids.lengths)
+
+
+# ---------------------------------------------------------------------------
+# Plan-routed lookups: models call these; the ShardingPlan (and the
+# table_is_sharded predicate shared with distributed/spmd.py) decides
+# whether the explicit psum path or the plain replicated bag runs.
+# ---------------------------------------------------------------------------
+
+def _plan_shards(plan, vocab: int) -> bool:
+    from repro.distributed.spmd import table_is_sharded
+    return table_is_sharded(plan, vocab)
+
+
+def plan_seq_lookup(table: jnp.ndarray, ids: jnp.ndarray, *, vocab: int,
+                    plan=None) -> jnp.ndarray:
+    """(B, L) ids -> (B, L, D); exact ``take(table, clip(ids))`` semantics,
+    via the row-sharded psum path when the plan shards this table."""
+    if _plan_shards(plan, vocab):
+        return sharded_seq_lookup(table, ids, mesh=plan.mesh, vocab=vocab,
+                                  model_axis=plan.model_axis,
+                                  batch_axes=plan.batch_axes)
+    return jnp.take(table, jnp.clip(ids, 0, vocab - 1), axis=0)
+
+
+def plan_row_lookup(table: jnp.ndarray, ids: jnp.ndarray, *, vocab: int,
+                    plan=None) -> jnp.ndarray:
+    """(B,) ids -> (B, D); sharded single-row gather under the plan."""
+    if _plan_shards(plan, vocab):
+        return sharded_row_lookup(table, ids, mesh=plan.mesh, vocab=vocab,
+                                  model_axis=plan.model_axis,
+                                  batch_axes=plan.batch_axes)
+    return jnp.take(table, jnp.clip(ids, 0, vocab - 1), axis=0)
+
+
+def plan_bag_lookup(table: jnp.ndarray, ids: JaggedTensor,
+                    pooling: str = "sum", *, plan=None) -> jnp.ndarray:
+    """Jagged bag lookup, psum path when the plan shards this table.
+
+    max pooling never routes sharded (a psum cannot reassemble a max)."""
+    if pooling in ("sum", "mean") and _plan_shards(plan, table.shape[0]):
+        return sharded_jagged_bag_lookup(table, ids, mesh=plan.mesh,
+                                         vocab=table.shape[0],
+                                         pooling=pooling,
+                                         model_axis=plan.model_axis)
+    return bag_lookup(table, ids, pooling)
+
+
+def plan_bag_lookup_dense(table: jnp.ndarray, ids: jnp.ndarray,
+                          lengths: jnp.ndarray, pooling: str = "sum", *,
+                          vocab: Optional[int] = None,
+                          plan=None) -> jnp.ndarray:
+    """Padded-layout bag lookup, psum path when the plan shards this table.
+
+    max pooling never routes sharded (a psum cannot reassemble a max)."""
+    vocab = vocab if vocab is not None else table.shape[0]
+    if pooling in ("sum", "mean") and _plan_shards(plan, vocab):
+        # clip first: the sharded partial-bag zeroes out-of-range ids while
+        # bag_lookup_dense clips them — parity requires clip-then-shard
+        return sharded_bag_lookup(table, jnp.clip(ids, 0, vocab - 1), lengths,
+                                  mesh=plan.mesh, vocab=vocab, pooling=pooling,
+                                  model_axis=plan.model_axis,
+                                  batch_axes=plan.batch_axes)
+    return bag_lookup_dense(table, ids, lengths, pooling)
 
 
 def sharded_bag_lookup_rs(table: jnp.ndarray, ids: jnp.ndarray,

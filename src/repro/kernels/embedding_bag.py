@@ -13,7 +13,6 @@ and adding zero.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -9,10 +9,8 @@ partitioning sees plain XLA ops; kernels are validated separately).
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.masks import MaskSpec
 from repro.kernels import dispatch as _dispatch

@@ -1,0 +1,25 @@
+"""CPU device-count simulation knob, usable BEFORE jax initializes.
+
+The repo convention for multi-device CPU runs (CI, tests, launcher) is the
+env var ``XLA_FORCE_HOST_PLATFORM_DEVICE_COUNT=N``; XLA itself only reads
+the ``--xla_force_host_platform_device_count`` flag from ``XLA_FLAGS``.
+This module does the translation and deliberately imports nothing that
+could initialize jax — call it first thing (tests/conftest.py,
+launch/train.py).
+"""
+from __future__ import annotations
+
+import os
+
+
+def apply_host_device_env() -> None:
+    """Fold XLA_FORCE_HOST_PLATFORM_DEVICE_COUNT into XLA_FLAGS (no-op if
+    unset or if a device-count flag is already present)."""
+    n = os.environ.get("XLA_FORCE_HOST_PLATFORM_DEVICE_COUNT")
+    if not n:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        return
+    os.environ["XLA_FLAGS"] = (
+        flags + f" --xla_force_host_platform_device_count={n}").strip()

@@ -25,6 +25,30 @@ def make_test_mesh(n_data: int = 2, n_model: int = 2, multi_pod: bool = False):
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_mesh_from_spec(spec: str):
+    """``--mesh`` flag parser: 'DATAxMODEL' ('2x4') or 'PODxDATAxMODEL'
+    ('2x2x2'). Needs that many devices — on CPU set
+    XLA_FORCE_HOST_PLATFORM_DEVICE_COUNT (or the xla_force_host_platform_
+    device_count XLA flag) before jax initializes."""
+    dims = tuple(int(x) for x in spec.lower().replace("×", "x").split("x"))
+    if len(dims) == 2:
+        axes = ("data", "model")
+    elif len(dims) == 3:
+        axes = ("pod", "data", "model")
+    else:
+        raise ValueError(f"--mesh wants DATAxMODEL or PODxDATAxMODEL, got "
+                         f"{spec!r}")
+    need = 1
+    for d in dims:
+        need *= d
+    have = jax.device_count()
+    if have < need:
+        raise RuntimeError(
+            f"mesh {spec} needs {need} devices but only {have} visible — "
+            f"on CPU run with XLA_FORCE_HOST_PLATFORM_DEVICE_COUNT={need}")
+    return jax.make_mesh(dims, axes)
+
+
 # TPU v5e roofline constants (per chip)
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
 HBM_BW = 819e9                  # bytes/s

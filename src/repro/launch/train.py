@@ -10,28 +10,44 @@ Recsys archs can train from the disk-backed request-log pipeline
 async prefetching loader, with the (shard, offset) cursor checkpointed next
 to the model state so a killed run resumes bit-identically.
 
+SPMD: ``--mesh DATAxMODEL`` runs the recsys archs under a real device mesh —
+params/optimizer FSDP+TP sharded, embedding lookups via explicit psum
+collectives, batches split over the data axis by the loader. On CPU,
+simulate devices with XLA_FORCE_HOST_PLATFORM_DEVICE_COUNT (read below,
+before jax initializes). See docs/DISTRIBUTED.md.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch roo-lsr --steps 200
   PYTHONPATH=src python -m repro.launch.train --arch roo-lsr --steps 200 \
       --data disk --shard-dir /tmp/roo_shards --ckpt-dir /tmp/roo_ckpt
+  PYTHONPATH=src XLA_FORCE_HOST_PLATFORM_DEVICE_COUNT=8 \
+      python -m repro.launch.train --arch roo-lsr --steps 50 --mesh 2x4
   PYTHONPATH=src python -m repro.launch.train --arch dien --steps 50
   PYTHONPATH=src python -m repro.launch.train --arch starcoder2-15b --steps 20
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
+
+# must run before jax touches the backend: the CI/test convention for CPU
+# device simulation is the env var; translate it into the XLA flag
+from repro.launch.hostdevices import apply_host_device_env
+
+apply_host_device_env()
 
 import jax
 import jax.numpy as jnp
 
 
-def _recsys_loss(arch: str, rng):
+def _recsys_loss(arch: str, rng, plan=None):
     from repro.configs import roo_models as rm
     if arch in ("roo-lsr",):
         from repro.models.lsr import lsr_init, lsr_loss
         cfg = rm.lsr_config("userarch_hstu")
-        return lsr_init(rng, cfg), lambda p, b, r: lsr_loss(p, cfg, b)
+        return (lsr_init(rng, cfg),
+                lambda p, b, r: lsr_loss(p, cfg, b, plan=plan))
     if arch == "roo-esr":
         from repro.models.two_tower import esr_loss_roo, two_tower_init
         cfg = rm.esr_config()
@@ -44,7 +60,8 @@ def _recsys_loss(arch: str, rng):
     if arch == "hstu-gr":
         from repro.models.gr import gr_init, gr_ranking_loss
         cfg = rm.gr_config(hist_len=64)
-        return gr_init(rng, cfg), lambda p, b, r: gr_ranking_loss(p, cfg, b)
+        return (gr_init(rng, cfg),
+                lambda p, b, r: gr_ranking_loss(p, cfg, b, plan=plan))
     if arch == "mind":
         from repro.models.mind import MINDConfig, mind_init, mind_loss
         cfg = MINDConfig(n_items=50000)
@@ -89,11 +106,35 @@ def main() -> None:
                     help="online-join label wait window (seconds)")
     ap.add_argument("--late-fraction", type=float, default=0.0,
                     help="fraction of conversions given a heavy-tail delay")
+    ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
+                    help="run SPMD over a device mesh, e.g. 2x4 (or "
+                         "PODxDATAxMODEL). On CPU set "
+                         "XLA_FORCE_HOST_PLATFORM_DEVICE_COUNT to the "
+                         "device product. roo-lsr / hstu-gr only (plan-"
+                         "routed losses).")
     args = ap.parse_args()
     if args.attn_backend:
         from repro.kernels.dispatch import set_default_backend
         set_default_backend(args.attn_backend)
     rng = jax.random.PRNGKey(0)
+
+    plan = None
+    if args.mesh:
+        # only archs whose loss threads the plan into sharded lookups may
+        # run under a mesh: sharding the state of a plan-blind loss would
+        # silently re-gather every row-sharded table each step
+        plan_archs = ("roo-lsr", "hstu-gr")
+        if args.arch not in plan_archs:
+            raise SystemExit(f"--mesh supports {', '.join(plan_archs)} (their "
+                             f"losses route lookups through the sharding "
+                             f"plan); {args.arch} would train slower sharded "
+                             f"than replicated")
+        from repro.distributed.sharding import plan_for_mesh
+        from repro.launch.mesh import make_mesh_from_spec
+        mesh = make_mesh_from_spec(args.mesh)
+        plan = plan_for_mesh(mesh)
+        print(f"[spmd] mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+              f"over {mesh.devices.size} device(s)")
 
     from repro.train.loop import Trainer, TrainLoopConfig
     from repro.train.optim import (adam, default_is_embedding, make_mixed,
@@ -159,8 +200,16 @@ def main() -> None:
     # recsys: real data pipeline + real training
     from repro.data.batcher import BatcherConfig
     from repro.data.events import EventSimulator, EventStreamConfig
-    params, loss_fn = _recsys_loss(args.arch, rng)
-    batcher_cfg = BatcherConfig(b_ro=args.b_ro, b_nro=args.b_nro, hist_len=64)
+    params, loss_fn = _recsys_loss(args.arch, rng, plan=plan)
+    n_data_shards = 1
+    if plan is not None:
+        from repro.distributed.spmd import data_shard_count
+        n_data_shards = data_shard_count(plan)
+        if args.b_ro % n_data_shards or args.b_nro % n_data_shards:
+            raise SystemExit(f"--b-ro/--b-nro must be divisible by the "
+                             f"mesh's {n_data_shards} data shard(s)")
+    batcher_cfg = BatcherConfig(b_ro=args.b_ro, b_nro=args.b_nro, hist_len=64,
+                                n_shards=n_data_shards)
     stream_cfg = EventStreamConfig(n_requests=800, n_items=50000,
                                    hist_init_max=48, seed=0,
                                    late_fraction=args.late_fraction)
@@ -169,11 +218,9 @@ def main() -> None:
     trainer = Trainer(loss_fn, opt,
                       TrainLoopConfig(total_steps=args.steps, log_every=10,
                                       ckpt_dir=args.ckpt_dir, ckpt_every=100),
-                      lambda: params)
+                      lambda: params, plan=plan)
     t0 = time.time()
     if args.data == "disk":
-        import os
-
         from repro.pipeline import (OnlineJoinConfig, WatermarkJoiner,
                                     load_manifest, make_data_source,
                                     write_samples)
@@ -205,8 +252,10 @@ def main() -> None:
                   f"{len(manifest.shards)} shard(s), "
                   f"{manifest.n_bytes / 1e6:.2f} MB on disk")
         cursor_dir = os.path.join(args.ckpt_dir or args.shard_dir, "cursors")
+        from repro.distributed.spmd import make_batch_sharding_fn
         source = make_data_source(args.shard_dir, batcher_cfg, cursor_dir,
-                                  prefetch=not args.no_prefetch)
+                                  prefetch=not args.no_prefetch,
+                                  sharding=make_batch_sharding_fn(plan))
         state = trainer.run(source.batch_iter_fn, rng,
                             on_checkpoint=source.on_checkpoint)
     else:

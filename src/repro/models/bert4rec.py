@@ -11,7 +11,7 @@ encoded representation at the mask position. Encoder-only: no decode shapes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

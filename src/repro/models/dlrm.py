@@ -11,15 +11,14 @@ bottom MLP + RO lookups run at B_RO and fan out at the interaction.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.fanout import fanout
-from repro.core.roo_batch import ROOBatch
-from repro.embeddings.bag import bag_lookup_dense
-from repro.embeddings.sharded import EmbeddingCollectionConfig, TableConfig, init_tables
+from repro.embeddings.sharded import (EmbeddingCollectionConfig, TableConfig,
+                                      init_tables, plan_bag_lookup_dense)
 from repro.models.interactions import dot_interaction
 from repro.models.mlp import mlp_apply, mlp_init
 
@@ -76,12 +75,17 @@ def dlrm_init(rng: jax.Array, cfg: DLRMConfig, dtype=jnp.float32) -> Dict:
 
 
 def _field_lookup(params: Dict, cfg: DLRMConfig, ids: jnp.ndarray,
-                  lengths: jnp.ndarray, fields) -> jnp.ndarray:
-    """ids: (B, n_fields, multi_hot) -> (B, n_fields, D)."""
+                  lengths: jnp.ndarray, fields, plan=None) -> jnp.ndarray:
+    """ids: (B, n_fields, multi_hot) -> (B, n_fields, D).
+
+    Under an SPMD ``plan`` each row-sharded table's bag is an explicit
+    psum over ``model`` (embeddings/sharded.py); RO fields run at B_RO, so
+    their collectives move B_RO·D instead of B_NRO·D bytes."""
     embs = []
     for j, i_field in enumerate(fields):
         tbl = params["tables"][f"t{i_field}"]
-        embs.append(bag_lookup_dense(tbl, ids[:, j, :], lengths[:, j]))
+        embs.append(plan_bag_lookup_dense(tbl, ids[:, j, :], lengths[:, j],
+                                          plan=plan))
     return jnp.stack(embs, axis=1)
 
 
@@ -107,7 +111,7 @@ def dlrm_forward_roo(params: Dict, cfg: DLRMConfig,
                      ro_dense: jnp.ndarray,
                      ro_ids: jnp.ndarray, ro_lengths: jnp.ndarray,
                      nro_ids: jnp.ndarray, nro_lengths: jnp.ndarray,
-                     segment_ids: jnp.ndarray) -> jnp.ndarray:
+                     segment_ids: jnp.ndarray, plan=None) -> jnp.ndarray:
     """ROO path: user side at B_RO, fanned out once.
 
     ro_dense: (B_RO, 13); ro_ids: (B_RO, n_ro_fields, mh);
@@ -115,21 +119,22 @@ def dlrm_forward_roo(params: Dict, cfg: DLRMConfig,
     """
     ro_fields = range(cfg.n_ro_fields)
     nro_fields = range(cfg.n_ro_fields, cfg.n_sparse)
-    ro_embs = _field_lookup(params, cfg, ro_ids, ro_lengths, ro_fields)
-    nro_embs = _field_lookup(params, cfg, nro_ids, nro_lengths, nro_fields)
+    ro_embs = _field_lookup(params, cfg, ro_ids, ro_lengths, ro_fields, plan)
+    nro_embs = _field_lookup(params, cfg, nro_ids, nro_lengths, nro_fields,
+                             plan)
     return dlrm_forward_from_embs(params, cfg, ro_dense, ro_embs, nro_embs,
                                   segment_ids)
 
 
 def dlrm_forward_impression(params: Dict, cfg: DLRMConfig,
                             dense: jnp.ndarray, ids: jnp.ndarray,
-                            lengths: jnp.ndarray) -> jnp.ndarray:
+                            lengths: jnp.ndarray, plan=None) -> jnp.ndarray:
     """Impression-level baseline: everything at B_NRO.
 
     dense: (B, 13); ids: (B, 26, mh). Returns (B,) logits.
     """
     dense_out = mlp_apply(params["bot_mlp"], dense)
-    embs = _field_lookup(params, cfg, ids, lengths, range(cfg.n_sparse))
+    embs = _field_lookup(params, cfg, ids, lengths, range(cfg.n_sparse), plan)
     z = dot_interaction(dense_out, embs)
     return mlp_apply(params["top_mlp"], z)[:, 0]
 

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import math
 from functools import lru_cache
-from typing import Dict, Tuple
+from typing import Dict
 
 import numpy as np
 import jax.numpy as jnp

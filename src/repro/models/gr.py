@@ -14,7 +14,7 @@ hstu_gr config instantiates it at production width.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +24,7 @@ from repro.core.masks import causal_spec
 from repro.core.roo_batch import ROOBatch
 from repro.core.sequence import (ROOSequenceConfig, encode_roo,
                                  gather_targets_to_ro, scatter_targets_to_nro)
+from repro.embeddings.sharded import plan_row_lookup, plan_seq_lookup
 from repro.models.mlp import mlp_apply, mlp_init
 
 
@@ -51,29 +52,32 @@ def gr_init(rng: jax.Array, cfg: GRConfig, dtype=jnp.float32) -> Dict:
     }
 
 
-def _embed_history(params: Dict, cfg: GRConfig, batch: ROOBatch) -> jnp.ndarray:
+def _embed_history(params: Dict, cfg: GRConfig, batch: ROOBatch,
+                   plan=None) -> jnp.ndarray:
     ids = batch.history_ids[:, :cfg.hist_len]
     acts = batch.history_actions[:, :cfg.hist_len]
-    e = jnp.take(params["item_emb"], jnp.clip(ids, 0, cfg.n_items - 1), axis=0)
+    # item table is row-sharded under an SPMD plan: one B_RO-sized psum
+    e = plan_seq_lookup(params["item_emb"], ids, vocab=cfg.n_items, plan=plan)
     a = jnp.take(params["act_emb"], jnp.clip(acts, 0, 3), axis=0)
     return e + a
 
 
-def gr_history_repr(params: Dict, cfg: GRConfig, batch: ROOBatch) -> jnp.ndarray:
+def gr_history_repr(params: Dict, cfg: GRConfig, batch: ROOBatch,
+                    plan=None) -> jnp.ndarray:
     """Request-only half of GR ranking: embedded (item+action) history,
     (B_RO, hist_len, d). The HSTU encode itself consumes the request's
     targets (ROO mask), so the embedding stage is the cacheable RO part."""
-    return _embed_history(params, cfg, batch)
+    return _embed_history(params, cfg, batch, plan=plan)
 
 
 def gr_ranking_logits_from_history(params: Dict, cfg: GRConfig,
-                                   batch: ROOBatch,
-                                   hist: jnp.ndarray) -> jnp.ndarray:
+                                   batch: ROOBatch, hist: jnp.ndarray,
+                                   plan=None) -> jnp.ndarray:
     """GR ranking logits given a precomputed history embedding
     (from ``gr_history_repr`` or a serving cache)."""
     lengths = jnp.minimum(batch.history_lengths, cfg.hist_len)
-    tgt_nro = jnp.take(params["item_emb"],
-                       jnp.clip(batch.item_ids, 0, cfg.n_items - 1), axis=0)
+    tgt_nro = plan_row_lookup(params["item_emb"], batch.item_ids,
+                              vocab=cfg.n_items, plan=plan)
     tgt_ro = gather_targets_to_ro(tgt_nro, batch, cfg.m_targets)
     enc = encode_roo({"hstu": params["hstu"]}, cfg.seq_cfg(), hist, lengths,
                      tgt_ro, batch.num_impressions)          # (B_RO, m, d)
@@ -81,15 +85,18 @@ def gr_ranking_logits_from_history(params: Dict, cfg: GRConfig,
     return mlp_apply(params["task_head"], feats)
 
 
-def gr_ranking_logits(params: Dict, cfg: GRConfig, batch: ROOBatch) -> jnp.ndarray:
+def gr_ranking_logits(params: Dict, cfg: GRConfig, batch: ROOBatch,
+                      plan=None) -> jnp.ndarray:
     """ROO ranking: encode [history | m targets] once per request;
     (B_NRO, n_tasks) logits."""
     return gr_ranking_logits_from_history(
-        params, cfg, batch, gr_history_repr(params, cfg, batch))
+        params, cfg, batch, gr_history_repr(params, cfg, batch, plan=plan),
+        plan=plan)
 
 
-def gr_ranking_loss(params: Dict, cfg: GRConfig, batch: ROOBatch) -> jnp.ndarray:
-    logits = gr_ranking_logits(params, cfg, batch)
+def gr_ranking_loss(params: Dict, cfg: GRConfig, batch: ROOBatch,
+                    plan=None) -> jnp.ndarray:
+    logits = gr_ranking_logits(params, cfg, batch, plan=plan)
     y = jnp.stack([batch.labels[:, 0],
                    (batch.labels[:, min(1, batch.labels.shape[1] - 1)] > 0
                     ).astype(logits.dtype)], -1)[:, :cfg.n_tasks]
@@ -99,10 +106,10 @@ def gr_ranking_loss(params: Dict, cfg: GRConfig, batch: ROOBatch) -> jnp.ndarray
 
 
 def gr_retrieval_loss(params: Dict, cfg: GRConfig, batch: ROOBatch,
-                      temperature: float = 0.05) -> jnp.ndarray:
+                      temperature: float = 0.05, plan=None) -> jnp.ndarray:
     """Autoregressive next-item prediction over the history (RO-only) plus
     in-batch candidate softmax — the GR retrieval objective."""
-    hist = _embed_history(params, cfg, batch)
+    hist = _embed_history(params, cfg, batch, plan=plan)
     lengths = jnp.minimum(batch.history_lengths, cfg.hist_len)
     spec = causal_spec(lengths, cfg.hist_len)
     enc = hstu_apply(params["hstu"], cfg.hstu, hist, spec)   # (B_RO, n, d)
@@ -111,11 +118,11 @@ def gr_retrieval_loss(params: Dict, cfg: GRConfig, batch: ROOBatch,
     nxt = batch.history_ids[:, 1:cfg.hist_len]
     valid = (jnp.arange(cfg.hist_len - 1)[None] < (lengths - 1)[:, None])
     # sampled softmax against the in-batch item candidates
-    cand = jnp.take(params["item_emb"],
-                    jnp.clip(batch.item_ids, 0, cfg.n_items - 1), axis=0)
+    cand = plan_row_lookup(params["item_emb"], batch.item_ids,
+                           vocab=cfg.n_items, plan=plan)
     logits = jnp.einsum("bnd,cd->bnc", q, cand) / temperature
-    tgt_emb = jnp.take(params["item_emb"],
-                       jnp.clip(nxt, 0, cfg.n_items - 1), axis=0)
+    tgt_emb = plan_seq_lookup(params["item_emb"], nxt, vocab=cfg.n_items,
+                              plan=plan)
     pos = jnp.sum(q * tgt_emb, axis=-1) / temperature        # (B_RO, n-1)
     lse = jnp.logaddexp(jax.scipy.special.logsumexp(logits, axis=-1), pos)
     nll = lse - pos

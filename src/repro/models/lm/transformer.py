@@ -19,7 +19,7 @@ does not apply to LM pretraining batches; these archs run WITHOUT it.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -30,6 +30,8 @@ from repro.core.sequence import (ROOSequenceConfig, encode_roo,
                                  gather_targets_to_ro, roo_sequence_init,
                                  scatter_targets_to_nro)
 from repro.embeddings.bag import bag_lookup, bag_lookup_dense
+from repro.embeddings.sharded import (plan_bag_lookup, plan_row_lookup,
+                                      plan_seq_lookup)
 from repro.models.interactions import dcnv2_apply, dcnv2_init
 from repro.models.mlp import mlp_apply, mlp_init
 
@@ -99,21 +101,26 @@ def lsr_init(rng: jax.Array, cfg: LSRConfig, dtype=jnp.float32) -> Dict:
 
 
 def _user_side(params: Dict, cfg: LSRConfig, batch: ROOBatch,
-               cats_override: jnp.ndarray = None) -> jnp.ndarray:
-    """All RO computation -> (B_RO, user_width). Runs at B_RO under ROO."""
+               cats_override: jnp.ndarray = None, plan=None) -> jnp.ndarray:
+    """All RO computation -> (B_RO, user_width). Runs at B_RO under ROO.
+
+    Under an SPMD ``plan`` the big tables are row-sharded over ``model``;
+    their lookups route through embeddings/sharded.py and each costs one
+    B_RO-sized psum — the RO-side collective ROO shrinks (§2.2, Fig. 3).
+    """
     d = cfg.embed_dim
     dense = mlp_apply(params["dense_proj"], batch.ro_dense)          # (B_RO,d)
     if cats_override is not None:
         cats = cats_override
     elif batch.ro_sparse is not None:
-        cats = bag_lookup(params["user_cat_emb"], batch.ro_sparse["user_ids"],
-                          pooling="mean")
+        cats = plan_bag_lookup(params["user_cat_emb"],
+                               batch.ro_sparse["user_ids"],
+                               pooling="mean", plan=plan)
     else:
         cats = jnp.zeros_like(dense)
     if cfg.mode in ("userarch_hstu", "hstu_ranking"):
-        hist_emb = jnp.take(params["item_emb"],
-                            jnp.clip(batch.history_ids, 0, cfg.n_items - 1),
-                            axis=0)
+        hist_emb = plan_seq_lookup(params["item_emb"], batch.history_ids,
+                                   vocab=cfg.n_items, plan=plan)
         act = jnp.take(params["act_emb"], jnp.clip(batch.history_actions, 0, 3),
                        axis=0)
         spec = causal_spec(batch.history_lengths, cfg.hist_len)
@@ -131,37 +138,38 @@ def _user_side(params: Dict, cfg: LSRConfig, batch: ROOBatch,
     return feats.reshape(feats.shape[0], -1)
 
 
-def _item_side(params: Dict, cfg: LSRConfig, batch: ROOBatch) -> jnp.ndarray:
-    emb = jnp.take(params["item_emb"],
-                   jnp.clip(batch.item_ids, 0, cfg.n_items - 1), axis=0)
+def _item_side(params: Dict, cfg: LSRConfig, batch: ROOBatch,
+               plan=None) -> jnp.ndarray:
+    emb = plan_row_lookup(params["item_emb"], batch.item_ids,
+                          vocab=cfg.n_items, plan=plan)
     dense = mlp_apply(params["item_dense_proj"], batch.nro_dense)
     return jnp.concatenate([emb, dense], axis=-1)                    # (B_NRO,2d)
 
 
-def lsr_user_repr(params: Dict, cfg: LSRConfig, batch: ROOBatch) -> jnp.ndarray:
+def lsr_user_repr(params: Dict, cfg: LSRConfig, batch: ROOBatch,
+                  plan=None) -> jnp.ndarray:
     """Request-only half of the LSR forward: (B_RO, user_width).
 
     Split out so serving can run it independently (once per unique request)
     and memoize the result across repeat candidates (serve/user_cache.py).
     """
-    return _user_side(params, cfg, batch)
+    return _user_side(params, cfg, batch, plan=plan)
 
 
 def lsr_logits_from_user(params: Dict, cfg: LSRConfig, batch: ROOBatch,
-                         user: jnp.ndarray) -> jnp.ndarray:
+                         user: jnp.ndarray, plan=None) -> jnp.ndarray:
     """NRO half of the LSR forward, given a precomputed (B_RO, user_width)
     RO representation (from ``lsr_user_repr`` or a serving cache)."""
     user_at_nro = fanout(user, batch.segment_ids)
-    item = _item_side(params, cfg, batch)
+    item = _item_side(params, cfg, batch, plan=plan)
     if cfg.mode == "hstu_ranking":
         # ROO sequential targets: encode [history | m targets] once/request
-        hist_emb = jnp.take(params["item_emb"],
-                            jnp.clip(batch.history_ids, 0, cfg.n_items - 1),
-                            axis=0)
+        hist_emb = plan_seq_lookup(params["item_emb"], batch.history_ids,
+                                   vocab=cfg.n_items, plan=plan)
         act = jnp.take(params["act_emb"], jnp.clip(batch.history_actions, 0, 3),
                        axis=0)
-        tgt_nro = jnp.take(params["item_emb"],
-                           jnp.clip(batch.item_ids, 0, cfg.n_items - 1), axis=0)
+        tgt_nro = plan_row_lookup(params["item_emb"], batch.item_ids,
+                                  vocab=cfg.n_items, plan=plan)
         tgt_ro = gather_targets_to_ro(tgt_nro, batch, cfg.m_targets)
         seq_cfg = ROOSequenceConfig(_hstu_cfg(cfg), cfg.hist_len, cfg.m_targets)
         enc = encode_roo(params["seq"], seq_cfg, hist_emb + act,
@@ -173,10 +181,12 @@ def lsr_logits_from_user(params: Dict, cfg: LSRConfig, batch: ROOBatch,
     return mlp_apply(params["top_mlp"], x)
 
 
-def lsr_logits_roo(params: Dict, cfg: LSRConfig, batch: ROOBatch) -> jnp.ndarray:
+def lsr_logits_roo(params: Dict, cfg: LSRConfig, batch: ROOBatch,
+                   plan=None) -> jnp.ndarray:
     """(B_NRO, n_tasks) multi-task logits, ROO path."""
     return lsr_logits_from_user(params, cfg, batch,
-                                lsr_user_repr(params, cfg, batch))
+                                lsr_user_repr(params, cfg, batch, plan=plan),
+                                plan=plan)
 
 
 def lsr_logits_impression(params: Dict, cfg: LSRConfig, batch: ROOBatch) -> jnp.ndarray:
@@ -216,8 +226,9 @@ def lsr_logits_impression(params: Dict, cfg: LSRConfig, batch: ROOBatch) -> jnp.
 
 
 def lsr_loss(params: Dict, cfg: LSRConfig, batch: ROOBatch,
-             roo: bool = True) -> jnp.ndarray:
-    logits = (lsr_logits_roo if roo else lsr_logits_impression)(params, cfg, batch)
+             roo: bool = True, plan=None) -> jnp.ndarray:
+    logits = (lsr_logits_roo(params, cfg, batch, plan=plan) if roo
+              else lsr_logits_impression(params, cfg, batch))
     y = batch.labels[:, :cfg.n_tasks]
     if y.shape[1] < cfg.n_tasks:
         y = jnp.pad(y, ((0, 0), (0, cfg.n_tasks - y.shape[1])))

@@ -1,7 +1,7 @@
 """Plain MLP + initializers shared across the model zoo."""
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Dict, Sequence
 
 import jax
 import jax.numpy as jnp

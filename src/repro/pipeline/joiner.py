@@ -30,7 +30,6 @@ import dataclasses
 import heapq
 from typing import Dict, Iterable, Iterator, List, Optional, Tuple
 
-import numpy as np
 
 from repro.core.joiner import (ROOSample, _RequestJoinRecord,
                                record_to_sample)

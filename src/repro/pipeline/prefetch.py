@@ -77,15 +77,32 @@ class PrefetchLoader:
 
     ``prefetch=False`` runs the same stream synchronously on the calling
     thread — the benchmark baseline and a debugging aid.
+
+    ``sharding`` places each batch under an SPMD mesh from the loader
+    thread itself: either a pytree of ``jax.sharding.Sharding`` congruent
+    with the batch, or a callable ``batch -> shardings`` (e.g.
+    ``repro.distributed.spmd.make_batch_sharding_fn(plan)``). Without it
+    ``device_put`` targets the default device and a mesh'd train step
+    would pay a host-side reshard copy on every batch.
     """
 
     def __init__(self, dataset: ShardDataset, prefetch: bool = True,
-                 prefetch_depth: int = 3, epochs: Optional[int] = None):
+                 prefetch_depth: int = 3, epochs: Optional[int] = None,
+                 sharding=None):
         assert prefetch_depth >= 1
         self.dataset = dataset
         self.prefetch = prefetch
         self.prefetch_depth = prefetch_depth
         self.epochs = epochs          # None = cycle forever (training)
+        self.sharding = sharding
+
+    def _place(self, batch: ROOBatch):
+        s = self.sharding
+        if s is None:
+            return jax.block_until_ready(jax.device_put(batch))
+        if callable(s):
+            s = s(batch)
+        return jax.block_until_ready(jax.device_put(batch, s))
 
     # -- the deterministic host-side stream -------------------------------------
     def _host_stream(self, start: Cursor, skip_batches: int = 0
@@ -129,7 +146,7 @@ class PrefetchLoader:
                 ) -> Iterator[Tuple[ROOBatch, Cursor]]:
         if not self.prefetch:
             for batch, nxt in self._host_stream(start, skip_batches):
-                yield jax.block_until_ready(jax.device_put(batch)), nxt
+                yield self._place(batch), nxt
             return
         yield from self._prefetch_iter(start, skip_batches)
 
@@ -142,8 +159,7 @@ class PrefetchLoader:
         def _produce() -> None:
             try:
                 for batch, nxt in self._host_stream(start, skip_batches):
-                    item = (jax.block_until_ready(jax.device_put(batch)),
-                            nxt)
+                    item = (self._place(batch), nxt)
                     while not stop.is_set():
                         try:
                             q.put(item, timeout=0.1)

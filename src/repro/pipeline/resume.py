@@ -22,7 +22,7 @@ import dataclasses
 import hashlib
 import json
 import os
-from typing import Callable, Dict, Iterator, Optional
+from typing import Dict, Iterator, Optional
 
 from repro.pipeline.prefetch import Cursor, PrefetchLoader, ShardDataset
 
@@ -130,9 +130,15 @@ class PipelineDataSource:
 
 
 def make_data_source(shard_dir: str, batcher_cfg, cursor_dir: str,
-                     prefetch: bool = True,
-                     prefetch_depth: int = 3) -> PipelineDataSource:
-    """Convenience: shard dir + batcher config -> ready-to-run data source."""
+                     prefetch: bool = True, prefetch_depth: int = 3,
+                     sharding=None) -> PipelineDataSource:
+    """Convenience: shard dir + batcher config -> ready-to-run data source.
+
+    ``sharding`` is forwarded to PrefetchLoader so the loader thread places
+    batches straight onto an SPMD mesh (see
+    ``repro.distributed.spmd.make_batch_sharding_fn``).
+    """
     loader = PrefetchLoader(ShardDataset(shard_dir, batcher_cfg),
-                            prefetch=prefetch, prefetch_depth=prefetch_depth)
+                            prefetch=prefetch, prefetch_depth=prefetch_depth,
+                            sharding=sharding)
     return PipelineDataSource(loader, CursorStore(cursor_dir))

@@ -6,9 +6,16 @@ Designed for thousands-of-nodes operation:
   * async save thread — training never blocks on storage;
   * keep-last-k retention;
   * resume picks the newest COMMITTED step; partial writes are ignored;
-  * elastic reshard: checkpoints store the global (unsharded) arrays, so a
-    restore may target a different mesh/topology — restore_resharded()
-    re-applies any sharding on load (tested mesh A -> mesh B);
+  * sharded state: a leaf laid out over >1 device is snapshotted per shard
+    (``a{i}.s{k}`` entries in arrays.npz) plus a ``sharding.json`` manifest
+    recording each leaf's global shape/dtype, PartitionSpec and shard
+    index ranges — no host-side gather of the global array on save;
+  * elastic reshard: restore reassembles global arrays from the shard
+    entries, so a restore may target a *different* mesh/topology —
+    ``restore_sharded(mesh)`` re-applies every saved spec onto the new mesh
+    (axes that don't exist or don't divide fall back to replicated), and
+    ``restore_resharded()`` takes an explicit shardings pytree
+    (tested mesh A -> mesh B);
   * deterministic data skip: the step number keys the data iterator offset,
     so a restarted worker replays nothing and skips nothing.
 """
@@ -26,6 +33,106 @@ import jax
 import numpy as np
 
 
+def _is_sharded(x) -> bool:
+    return isinstance(x, jax.Array) and len(x.sharding.device_set) > 1
+
+
+def _resolve_dtype(name: str) -> np.dtype:
+    """Dtype from its string name, including ml_dtypes extension types
+    (bfloat16, float8_*) that np.dtype alone can't parse."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _spec_to_json(sharding) -> Optional[list]:
+    """PartitionSpec -> JSON ([axis | [axes...] | null, ...]); None when the
+    leaf has no NamedSharding (spec unknown — restore replicates)."""
+    spec = getattr(sharding, "spec", None)
+    if spec is None:
+        return None
+    out = []
+    for e in spec:
+        if e is None:
+            out.append(None)
+        elif isinstance(e, (tuple, list)):
+            out.append(list(e))
+        else:
+            out.append(str(e))
+    return out
+
+
+def _spec_from_json(entries: Optional[list], mesh) -> Optional[Any]:
+    """JSON spec -> PartitionSpec valid on ``mesh`` (axes filtered to those
+    the mesh actually has); None when nothing survives."""
+    from jax.sharding import PartitionSpec as P
+    if entries is None or mesh is None:
+        return None
+    names = set(mesh.axis_names)
+    out = []
+    for e in entries:
+        if e is None:
+            out.append(None)
+        elif isinstance(e, list):
+            kept = tuple(a for a in e if a in names)
+            out.append(kept if kept else None)
+        else:
+            out.append(e if e in names else None)
+    return P(*out)
+
+
+def _snapshot_leaf(i: int, x) -> tuple:
+    """Host snapshot of one state leaf.
+
+    Returns (arrays: {npz_key: np.ndarray}, manifest_entry | None). Sharded
+    leaves snapshot per device shard (deduped by index — replicated-axis
+    copies are identical); everything else snapshots whole. ml_dtypes
+    leaves always get a manifest entry (one full-extent shard), sharded or
+    not, so their dtype survives npz.
+    """
+    if not _is_sharded(x):
+        arr = np.asarray(x)
+        if arr.dtype.kind != "V":
+            return {f"a{i}": arr}, None
+        # unsharded bfloat16/float8 leaf: route through the byte-view +
+        # manifest path as a single shard covering the whole array
+        key = f"a{i}.s0"
+        entry = {"shape": list(arr.shape), "dtype": str(arr.dtype),
+                 "spec": None,
+                 "shards": [{"key": key,
+                             "index": [[0, d] for d in arr.shape]}]}
+        if arr.ndim >= 1:
+            arr = np.ascontiguousarray(arr).view(np.uint8)
+        return {key: arr}, entry
+    arrays: Dict[str, np.ndarray] = {}
+    shards_meta: List[dict] = []
+    seen = set()
+    for shard in x.addressable_shards:
+        index = tuple(
+            (0 if sl.start is None else int(sl.start),
+             dim if sl.stop is None else int(sl.stop))
+            for sl, dim in zip(shard.index, x.shape))
+        if index in seen:
+            continue
+        seen.add(index)
+        key = f"a{i}.s{len(shards_meta)}"
+        # plain asarray: ascontiguousarray would promote 0-d to (1,)
+        arr = np.asarray(shard.data)
+        if arr.dtype.kind == "V" and arr.ndim >= 1:
+            # ml_dtypes (bfloat16, float8_*) degrade to raw void inside
+            # npz; store the byte view — the manifest dtype restores it.
+            # 0-d arrays can't change itemsize; their void bytes already
+            # round-trip and restore() views them back by itemsize.
+            arr = np.ascontiguousarray(arr).view(np.uint8)
+        arrays[key] = arr
+        shards_meta.append({"key": key, "index": [list(r) for r in index]})
+    entry = {"shape": list(x.shape), "dtype": str(x.dtype),
+             "spec": _spec_to_json(x.sharding), "shards": shards_meta}
+    return arrays, entry
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep_last: int = 3):
         self.dir = directory
@@ -40,18 +147,28 @@ class CheckpointManager:
     def save(self, step: int, state: Any, blocking: bool = True) -> None:
         # snapshot to host memory synchronously (cheap), write async
         flat, treedef = jax.tree_util.tree_flatten(state)
-        host = [np.asarray(x) for x in flat]
+        host: Dict[str, np.ndarray] = {}
+        sharded_manifest: Dict[str, dict] = {}
+        for i, x in enumerate(flat):
+            arrays, entry = _snapshot_leaf(i, x)
+            host.update(arrays)
+            if entry is not None:
+                sharded_manifest[str(i)] = entry
 
         def _write():
             tmp = self._path(step) + ".tmp"
             os.makedirs(tmp, exist_ok=True)
             with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
-                np.savez(f, **{f"a{i}": a for i, a in enumerate(host)})
+                np.savez(f, **host)
             with open(os.path.join(tmp, "treedef.pkl"), "wb") as f:
                 pickle.dump(treedef, f)
+            if sharded_manifest:
+                with open(os.path.join(tmp, "sharding.json"), "w") as f:
+                    json.dump(sharded_manifest, f)
             with open(os.path.join(tmp, "meta.json"), "w") as f:
                 json.dump({"step": step, "ts": time.time(),
-                           "n_arrays": len(host)}, f)
+                           "n_arrays": len(flat),
+                           "n_sharded": len(sharded_manifest)}, f)
             final = self._path(step)
             if os.path.exists(final):
                 shutil.rmtree(final)
@@ -87,7 +204,15 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def _load_manifest(self, path: str) -> Dict[str, dict]:
+        mpath = os.path.join(path, "sharding.json")
+        if not os.path.exists(mpath):
+            return {}
+        with open(mpath) as f:
+            return json.load(f)
+
     def restore(self, step: Optional[int] = None) -> Any:
+        """Restore as host (global) arrays; shard entries are reassembled."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
@@ -95,8 +220,68 @@ class CheckpointManager:
         with open(os.path.join(path, "treedef.pkl"), "rb") as f:
             treedef = pickle.load(f)
         data = np.load(os.path.join(path, "arrays.npz"))
-        flat = [data[f"a{i}"] for i in range(len(data.files))]
+        manifest = self._load_manifest(path)
+        n = treedef.num_leaves
+        flat = []
+        for i in range(n):
+            entry = manifest.get(str(i))
+            if entry is None:
+                flat.append(data[f"a{i}"])
+                continue
+            dtype = _resolve_dtype(entry["dtype"])
+            out = np.empty(tuple(entry["shape"]), dtype=dtype)
+            for sh in entry["shards"]:
+                sl = tuple(slice(s, e) for s, e in sh["index"])
+                block = data[sh["key"]]
+                if dtype.kind == "V" and block.dtype != dtype:
+                    block = block.view(dtype)   # byte / raw-void view back
+                if sl:
+                    out[sl] = block
+                else:
+                    out = block.reshape(())     # 0-d leaf: single shard
+            flat.append(out)
         return jax.tree_util.tree_unflatten(treedef, flat)
+
+    def saved_specs(self, step: Optional[int] = None) -> Dict[int, list]:
+        """leaf index -> JSON PartitionSpec for sharded leaves of a step."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        manifest = self._load_manifest(self._path(step))
+        return {int(i): e["spec"] for i, e in manifest.items()}
+
+    def restore_sharded(self, mesh, step: Optional[int] = None) -> Any:
+        """Restore onto ``mesh``, re-applying every leaf's saved
+        PartitionSpec — the mesh may have a different shape (or different
+        axes) than the one the checkpoint was saved from. Specs whose axes
+        are missing from the new mesh, or don't divide the leaf, fall back
+        to replicated placement.
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        state = self.restore(step)
+        specs = self.saved_specs(step)
+        flat, treedef = jax.tree_util.tree_flatten(state)
+        placed = []
+        for i, x in enumerate(flat):
+            spec = _spec_from_json(specs.get(i), mesh)
+            if spec is None:
+                placed.append(jax.device_put(
+                    x, NamedSharding(mesh, P())))
+                continue
+            # divisibility check per dim against the NEW mesh
+            ok = True
+            for dim, e in zip(np.shape(x), tuple(spec)):
+                if e is None:
+                    continue
+                axes = (e,) if isinstance(e, str) else tuple(e)
+                n = 1
+                for a in axes:
+                    n *= mesh.shape[a]
+                if n > 1 and dim % n != 0:
+                    ok = False
+            placed.append(jax.device_put(
+                x, NamedSharding(mesh, spec if ok else P())))
+        return jax.tree_util.tree_unflatten(treedef, placed)
 
     def restore_resharded(self, shardings: Any,
                           step: Optional[int] = None) -> Any:

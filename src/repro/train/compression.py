@@ -8,7 +8,7 @@ bias into convergence — property-tested in tests/test_compression.py.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

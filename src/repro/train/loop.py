@@ -41,12 +41,18 @@ class TrainLoopConfig:
 
 
 def make_train_step(loss_fn: Callable, opt: Optimizer,
-                    microbatches: int = 1):
+                    microbatches: int = 1, plan=None, state_shardings=None):
     """Returns jit'd step(state, batch) -> (state, metrics).
 
     With microbatches > 1, `batch` must be a pytree whose leaves have a
     leading microbatch axis; grads are accumulated (comm/compute overlap:
     the all-reduce happens once per step, not per microbatch).
+
+    With an enabled ``plan`` (distributed/sharding.py) and the matching
+    ``state_shardings`` pytree (distributed/spmd.py), the step runs SPMD:
+    inputs keep their committed shardings (params/opt FSDP+TP, batch over
+    the data axes) and ``out_shardings`` pins the updated state to the same
+    layout, so parameters never silently de-shard between steps.
     """
     def step(state, batch, rng):
         params = state["params"]
@@ -76,18 +82,26 @@ def make_train_step(loss_fn: Callable, opt: Optimizer,
                      "step": state["step"] + 1}
         return new_state, {"loss": loss, "grad_norm": gnorm}
 
+    if plan is not None and plan.enabled and state_shardings is not None:
+        # metrics sharding left to the compiler (None = unconstrained)
+        return jax.jit(step, out_shardings=(state_shardings, None))
     return jax.jit(step)
 
 
 class Trainer:
     def __init__(self, loss_fn: Callable, opt: Optimizer,
                  cfg: TrainLoopConfig,
-                 init_params_fn: Callable[[], Any]):
+                 init_params_fn: Callable[[], Any], *, plan=None):
         self.loss_fn = loss_fn
         self.opt = opt
         self.cfg = cfg
         self.init_params_fn = init_params_fn
-        self.step_fn = make_train_step(loss_fn, opt, cfg.microbatches)
+        self.plan = plan
+        self._spmd = plan is not None and plan.enabled
+        # under a mesh the step's out_shardings need the concrete state
+        # pytree, so compilation is deferred to the first run()
+        self.step_fn = (None if self._spmd
+                        else make_train_step(loss_fn, opt, cfg.microbatches))
         self.ckpt = (CheckpointManager(cfg.ckpt_dir, cfg.keep_last)
                      if cfg.ckpt_dir else None)
         self.history: list = []
@@ -98,6 +112,23 @@ class Trainer:
                  "step": jnp.zeros((), jnp.int32)}
         if rng is not None:
             state["rng"] = rng
+        return state
+
+    def _prepare(self, state: Dict) -> Dict:
+        """Place state per plan and build the (possibly SPMD) step fn."""
+        if not self._spmd:
+            return state
+        from repro.distributed import spmd
+        shardings = spmd.state_shardings(state, self.plan)
+        state = jax.device_put(state, shardings)
+        if self.step_fn is None:
+            self.step_fn = make_train_step(self.loss_fn, self.opt,
+                                           self.cfg.microbatches,
+                                           plan=self.plan,
+                                           state_shardings=shardings)
+        # with grad accumulation dim 0 is the scan axis — shard dim 1
+        self._place_batch = spmd.make_batch_placer(
+            self.plan, batch_dim=1 if self.cfg.microbatches > 1 else 0)
         return state
 
     def run(self, batch_iter_fn: Callable[[int], Iterator],
@@ -116,11 +147,15 @@ class Trainer:
             state.setdefault("rng", rng)
         if state is None:
             state = self.init_state(rng)
+        state = self._prepare(state)
         base_rng = jnp.asarray(state["rng"])   # checkpointed base key wins
         it = batch_iter_fn(start)
         t0 = time.time()
         for step in range(start, self.cfg.total_steps):
             batch = next(it)
+            if self._spmd:
+                # cached shardings; no-op for loader-placed batches
+                batch = self._place_batch(batch)
             state, metrics = self.step_fn(state, batch,
                                           jax.random.fold_in(base_rng, step))
             if (step + 1) % self.cfg.log_every == 0:

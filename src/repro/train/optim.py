@@ -7,8 +7,7 @@ routes by parameter path, which is exactly how DLRM deployments configure it.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, NamedTuple, Tuple
+from typing import Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,12 +1,19 @@
 import os
 import sys
 
-# tests see ONE device (the dry-run sets 512 itself, in a subprocess);
-# a handful of distributed tests spawn subprocesses with their own flags.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# tests see ONE device by default (the dry-run sets 512 itself, in a
+# subprocess; a handful of distributed tests spawn subprocesses with their
+# own flags). The tier1-multidevice CI job sets
+# XLA_FORCE_HOST_PLATFORM_DEVICE_COUNT=8: translate it into the XLA flag
+# BEFORE jax initializes so tests/test_distributed_train.py gets a real
+# 2x4 mesh and the rest of the suite runs unchanged on device 0.
+from repro.launch.hostdevices import apply_host_device_env
+
+apply_host_device_env()
+
 import jax
-import numpy as np
 import pytest
 
 from repro.core.joiner import RequestLevelJoiner

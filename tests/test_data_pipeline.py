@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.data.jagged import JaggedTensor, KeyedJagged
+from repro.data.jagged import JaggedTensor
 from repro.embeddings.bag import bag_lookup, bag_lookup_dense
 
 

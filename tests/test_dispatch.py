@@ -1,7 +1,6 @@
 """HSTU attention backend dispatch: forward/backward parity across
 backends (vs the jnp-dense oracle), ragged ROO batches, rab on/off,
 non-128-multiple sequence lengths (pad-and-crop), and backend resolution."""
-import os
 
 import jax
 import jax.numpy as jnp
@@ -10,8 +9,8 @@ import pytest
 
 from repro.core.hstu import (HSTUConfig, hstu_apply, hstu_attention_chunked,
                              hstu_init)
-from repro.core.masks import MaskSpec, causal_spec, roo_batch_mask, roo_spec
-from repro.kernels import dispatch, ref
+from repro.core.masks import causal_spec, roo_batch_mask, roo_spec
+from repro.kernels import dispatch
 
 PARITY_BACKENDS = ("pallas-interpret", "jnp-chunked")
 
