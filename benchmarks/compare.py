@@ -8,7 +8,8 @@ A row regresses when its ``us_per_call`` grows more than ``--max-regress``
 (default 20%, env BENCH_MAX_REGRESS overrides) relative to baseline.
 
 By default the comparison is *machine-normalized per benchmark family*
-(the row-name prefix: ``hstu...``, ``serving...``, ``pipeline...``): each
+(the row-name prefix: ``hstu...``, ``embedding...``, ``serving...``,
+``pipeline...``): each
 row's cur/base ratio is divided by the median ratio of its family
 *siblings* (leave-one-out, so a row's own regression cannot dilute its
 own yardstick — with self-inclusion a 2-row family would tolerate ~49%).
@@ -57,7 +58,7 @@ def median(xs):
 
 def family(name: str) -> str:
     """Benchmark family = first underscore token ('serving', 'pipeline',
-    'hstu'), the unit that shares a noise profile."""
+    'hstu', 'embedding'), the unit that shares a noise profile."""
     return name.split("_", 1)[0]
 
 

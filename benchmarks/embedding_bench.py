@@ -1,0 +1,112 @@
+"""Embedding subsystem benchmark: dedup + sparse-gradient path vs the dense
+path on a skewed (zipf) id workload — the measured payoff of the unified
+embedding subsystem (docs/EMBEDDINGS.md).
+
+Emits the standard ``name,us_per_call,derived`` rows:
+
+  embedding_lookup_direct  — jit'd (B·L, D) gather from the (V, D) table
+  embedding_lookup_dedup   — unique + gather + inverse-expand (same output;
+                             on CPU the unique sort loses to cache-hot
+                             duplicate reads — the row documents WHY auto-
+                             dedup is TPU-only; on TPU it bounds HBM reads
+                             by the unique count)
+  embedding_grads_dense    — value_and_grad of a pooled-bag loss w.r.t. the
+                             full (V, D) table (dense scatter backward)
+  embedding_grads_sparse   — make_sparse_value_and_grad: dedup gather +
+                             COO SparseRows backward (touched rows only)
+  embedding_step_dense     — grads + dense row-wise Adagrad (reads/writes
+                             all V rows)
+  embedding_step_sparse    — COO grads + touched-rows-only sparse apply
+
+The acceptance contract is the step pair: on a zipf workload the sparse
+path must beat the dense path (the gap is the V-row optimizer traffic plus
+the (V, D) gradient materialization the sparse path never does).
+
+Perf-gate coverage (benchmarks/baseline_smoke.json): the lookup_dedup and
+both grads rows are gated (stable within a few percent, min-of-12). The
+step_* rows and lookup_direct are emitted and land in the CI artifact but
+are NOT in the committed baseline: the 50 MB dense-step sweep swings
++-40% with sustained host memory-bandwidth contention and the 200 us direct
+gather with scheduler jitter — both outside the gate's 20% band on a
+shared box. The grads pair gates the same sparse-vs-dense property with a
+steadier estimator.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.embeddings import collection as ec
+from repro.embeddings.collection import dedup_gather
+from repro.embeddings.sparse import make_sparse_value_and_grad
+from repro.train.optim import rowwise_adagrad
+
+ZIPF_ALPHA = 1.1
+
+
+def _workload(v: int, d: int, b: int, l: int, seed: int = 0):
+    r = np.random.RandomState(seed)
+    table = jnp.asarray((r.normal(size=(v, d)) * 0.01).astype(np.float32))
+    zipf = np.minimum(r.zipf(ZIPF_ALPHA, size=(b, l)), v) - 1
+    ids = jnp.asarray(zipf.astype(np.int32))
+    lengths = jnp.full((b,), l, jnp.int32)
+    unique_frac = len(np.unique(zipf)) / zipf.size
+    return table, ids, lengths, unique_frac
+
+
+def run(smoke: bool = False) -> None:
+    if smoke:
+        v, d, b, l = 200_000, 64, 256, 32
+    else:
+        v, d, b, l = 1_000_000, 128, 512, 64
+    table, ids, lengths, unique_frac = _workload(v, d, b, l)
+    shape = f"V{v}xD{d};ids={b * l};zipf={ZIPF_ALPHA};uniq={unique_frac:.2f}"
+
+    # ---- lookup: direct gather vs dedup'd gather ---------------------------
+    direct = jax.jit(lambda t, i: jnp.take(t, i, axis=0))
+    dedup = jax.jit(lambda t, i: dedup_gather(t, jnp.clip(i, 0, v - 1)))
+    t_direct = time_fn(direct, table, ids)
+    t_dedup = time_fn(dedup, table, ids)
+    emit("embedding_lookup_direct", t_direct, shape)
+    emit("embedding_lookup_dedup", t_dedup,
+         f"{shape};vs_direct_x={t_direct / t_dedup:.2f}")
+
+    # ---- gradients + optimizer step: dense vs sparse -----------------------
+    def loss(p, batch, rng):
+        e = ec.bag_lookup_dense(p["t"], batch["ids"], batch["lens"], "sum",
+                                dedup=False)
+        return jnp.sum(e ** 2)
+
+    vag_sparse = make_sparse_value_and_grad(loss, lambda b_: {"t": b_["ids"]})
+    vag_dense = lambda p, b_, r: jax.value_and_grad(loss)(p, b_, r)
+    opt = rowwise_adagrad(0.05)
+    params = {"t": table}
+    state = opt.init(params)
+    batch = {"ids": ids, "lens": lengths}
+
+    def step(vag):
+        def fn(p, s, b_):
+            loss_val, g = vag(p, b_, None)
+            new_p, new_s = opt.update(g, s, p)
+            return new_p, new_s, loss_val
+        return jax.jit(fn)
+
+    g_dense = jax.jit(lambda p, b_: vag_dense(p, b_, None)[1])
+    g_sparse = jax.jit(lambda p, b_: vag_sparse(p, b_, None)[1])
+    t_gd = time_fn(g_dense, params, batch)
+    t_gs = time_fn(g_sparse, params, batch)
+    emit("embedding_grads_dense", t_gd, shape)
+    emit("embedding_grads_sparse", t_gs,
+         f"{shape};speedup_x={t_gd / t_gs:.2f}")
+
+    t_sd = time_fn(step(vag_dense), params, state, batch)
+    t_ss = time_fn(step(vag_sparse), params, state, batch)
+    emit("embedding_step_dense", t_sd, shape)
+    emit("embedding_step_sparse", t_ss,
+         f"{shape};speedup_x={t_sd / t_ss:.2f}")
+
+
+if __name__ == "__main__":
+    run(smoke=True)

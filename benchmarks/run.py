@@ -14,10 +14,14 @@ Prints ``name,us_per_call,derived`` CSV rows:
   hstu_kernel_*            — HSTU attention fwd/bwd per dispatch backend
   serving_*                — serving engine QPS/p50/p99 per regime,
                              user-tower cache on vs off (docs/SERVING.md)
+  embedding_*              — dedup lookup + sparse-grad + sparse-update vs
+                             the dense path on a zipf workload
+                             (docs/EMBEDDINGS.md)
 
-``--smoke`` runs the kernel, serving, and pipeline benchmarks at reduced
-scale — the tier-1 perf gate wired into scripts/check.sh. ``--json PATH``
-additionally writes every emitted row to a JSON file (the CI artifact).
+``--smoke`` runs the kernel, embedding, serving, and pipeline benchmarks at
+reduced scale — the tier-1 perf gate wired into scripts/check.sh. ``--json
+PATH`` additionally writes every emitted row to a JSON file (the CI
+artifact).
 """
 import argparse
 
@@ -32,8 +36,10 @@ def main() -> None:
     from benchmarks.common import write_json
     print("name,us_per_call,derived")
     try:
-        from benchmarks import hstu_kernel, pipeline_bench, serving
+        from benchmarks import (embedding_bench, hstu_kernel, pipeline_bench,
+                                serving)
         hstu_kernel.run(smoke=smoke)
+        embedding_bench.run(smoke=smoke)
         serving.run(smoke=smoke)
         pipeline_bench.run(smoke=smoke)
         if smoke:

@@ -1,11 +1,13 @@
 """EmbeddingBag — JAX has no native one; this IS part of the system.
 
-A bag lookup pools the embeddings of a variable-length id list per batch row:
-``take`` (ragged gather over the vocab) + ``segment_sum/max`` (reduce by
-row). Implemented over the framework's JaggedTensor layout so padding never
-contributes.
+A bag lookup pools the embeddings of a variable-length id list per batch
+row: ``take`` (ragged gather over the vocab) + ``segment_sum/max`` (reduce
+by row). Implemented over the framework's JaggedTensor layout so padding
+never contributes.
 
-The Pallas TPU kernel version lives in repro/kernels/embedding_bag.py with
+The gather and the pool are split (``bag_pool`` / ``bag_pool_dense``) so
+``embeddings/collection.py`` can apply request-level id dedup between them;
+the Pallas TPU kernel version lives in repro/kernels/embedding_bag.py with
 this module as its oracle.
 """
 from __future__ import annotations
@@ -20,17 +22,13 @@ from repro.data.jagged import JaggedTensor
 Pooling = Literal["sum", "mean", "max"]
 
 
-def bag_lookup(table: jnp.ndarray, ids: JaggedTensor,
-               pooling: Pooling = "sum") -> jnp.ndarray:
-    """table: (V, D); ids: JaggedTensor with int values.
-
-    Returns (batch, D) pooled embeddings; empty bags give zeros.
-    """
+def bag_pool(emb: jnp.ndarray, ids: JaggedTensor,
+             pooling: Pooling = "sum") -> jnp.ndarray:
+    """Pool pre-gathered rows ``emb (capacity, D)`` by the jagged layout of
+    ``ids``. Returns (batch, D); empty bags give zeros."""
     b = ids.batch_size
     seg = ids.segment_ids()                       # (capacity,), b == padding
     valid = (seg < b)
-    safe_ids = jnp.clip(ids.values, 0, table.shape[0] - 1)
-    emb = jnp.take(table, safe_ids, axis=0)       # (capacity, D)
     emb = emb * valid[:, None].astype(emb.dtype)
     if pooling == "max":
         neg = jnp.full_like(emb, jnp.finfo(emb.dtype).min)
@@ -45,18 +43,11 @@ def bag_lookup(table: jnp.ndarray, ids: JaggedTensor,
     return out
 
 
-def bag_lookup_dense(table: jnp.ndarray, ids: jnp.ndarray,
-                     lengths: jnp.ndarray,
-                     pooling: Pooling = "sum") -> jnp.ndarray:
-    """Padded-layout variant. ids: (B, L) int; lengths: (B,).
-
-    Used for fixed-width multi-hot features (e.g. user history pooling)
-    where jagged packing is unnecessary.
-    """
-    b, l = ids.shape
+def bag_pool_dense(emb: jnp.ndarray, lengths: jnp.ndarray,
+                   pooling: Pooling = "sum") -> jnp.ndarray:
+    """Pool pre-gathered rows ``emb (B, L, D)`` by ``lengths (B,)``."""
+    l = emb.shape[1]
     valid = jnp.arange(l)[None, :] < lengths[:, None]
-    safe = jnp.clip(ids, 0, table.shape[0] - 1)
-    emb = jnp.take(table, safe.reshape(-1), axis=0).reshape(b, l, -1)
     emb = emb * valid[..., None].astype(emb.dtype)
     if pooling == "max":
         neg = jnp.full_like(emb, jnp.finfo(emb.dtype).min)
@@ -67,3 +58,28 @@ def bag_lookup_dense(table: jnp.ndarray, ids: jnp.ndarray,
     if pooling == "mean":
         out = out / jnp.maximum(lengths, 1).astype(out.dtype)[:, None]
     return out
+
+
+def bag_lookup(table: jnp.ndarray, ids: JaggedTensor,
+               pooling: Pooling = "sum") -> jnp.ndarray:
+    """table: (V, D); ids: JaggedTensor with int values.
+
+    Returns (batch, D) pooled embeddings; empty bags give zeros.
+    """
+    safe_ids = jnp.clip(ids.values, 0, table.shape[0] - 1)
+    emb = jnp.take(table, safe_ids, axis=0)       # (capacity, D)
+    return bag_pool(emb, ids, pooling)
+
+
+def bag_lookup_dense(table: jnp.ndarray, ids: jnp.ndarray,
+                     lengths: jnp.ndarray,
+                     pooling: Pooling = "sum") -> jnp.ndarray:
+    """Padded-layout variant. ids: (B, L) int; lengths: (B,).
+
+    Used for fixed-width multi-hot features (e.g. user history pooling)
+    where jagged packing is unnecessary.
+    """
+    b, l = ids.shape
+    safe = jnp.clip(ids, 0, table.shape[0] - 1)
+    emb = jnp.take(table, safe.reshape(-1), axis=0).reshape(b, l, -1)
+    return bag_pool_dense(emb, lengths, pooling)

@@ -14,8 +14,7 @@ machinery amounts to under SPMD.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,34 +23,10 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.data.jagged import JaggedTensor
 from repro.distributed.sharding import shard_map
 from repro.embeddings.bag import bag_lookup, bag_lookup_dense
-
-
-@dataclasses.dataclass(frozen=True)
-class TableConfig:
-    name: str
-    vocab: int
-    dim: int
-    pooling: str = "sum"
-    side: str = "nro"          # "ro" (user/request) or "nro" (item) — decides
-                               # which batch size the lookup runs at under ROO
-
-
-@dataclasses.dataclass(frozen=True)
-class EmbeddingCollectionConfig:
-    tables: Tuple[TableConfig, ...]
-
-    def table(self, name: str) -> TableConfig:
-        for t in self.tables:
-            if t.name == name:
-                return t
-        raise KeyError(name)
-
-
-def init_tables(rng: jax.Array, cfg: EmbeddingCollectionConfig,
-                dtype=jnp.float32, scale: float = 0.01) -> Dict[str, jnp.ndarray]:
-    keys = jax.random.split(rng, len(cfg.tables))
-    return {t.name: (jax.random.normal(k, (t.vocab, t.dim)) * scale).astype(dtype)
-            for t, k in zip(cfg.tables, keys)}
+# table configs live with the collection (the embedding entry point);
+# re-exported here because the sharding plan machinery predates it
+from repro.embeddings.collection import (EmbeddingCollectionConfig,  # noqa: F401
+                                         TableConfig, init_tables)
 
 
 def table_partition_specs(cfg: EmbeddingCollectionConfig,
@@ -148,15 +123,6 @@ def sharded_seq_lookup(table: jnp.ndarray, ids: jnp.ndarray, *, mesh: Mesh,
         out_specs=P(batch_axes, None, None))(table, ids)
 
 
-def sharded_row_lookup(table: jnp.ndarray, ids: jnp.ndarray, *, mesh: Mesh,
-                       vocab: int, model_axis: str = "model",
-                       batch_axes: Tuple[str, ...] = ("data",)) -> jnp.ndarray:
-    """Row-sharded single-id lookup: (B,) ids -> (B, D) rows."""
-    return sharded_seq_lookup(table, ids[:, None], mesh=mesh, vocab=vocab,
-                              model_axis=model_axis,
-                              batch_axes=batch_axes)[:, 0, :]
-
-
 def sharded_jagged_bag_lookup(table: jnp.ndarray, ids: JaggedTensor, *,
                               mesh: Mesh, vocab: int, pooling: str = "sum",
                               model_axis: str = "model") -> jnp.ndarray:
@@ -197,67 +163,11 @@ def sharded_jagged_bag_lookup(table: jnp.ndarray, ids: JaggedTensor, *,
                                                   ids.lengths)
 
 
-# ---------------------------------------------------------------------------
-# Plan-routed lookups: models call these; the ShardingPlan (and the
-# table_is_sharded predicate shared with distributed/spmd.py) decides
-# whether the explicit psum path or the plain replicated bag runs.
-# ---------------------------------------------------------------------------
-
-def _plan_shards(plan, vocab: int) -> bool:
-    from repro.distributed.spmd import table_is_sharded
-    return table_is_sharded(plan, vocab)
-
-
-def plan_seq_lookup(table: jnp.ndarray, ids: jnp.ndarray, *, vocab: int,
-                    plan=None) -> jnp.ndarray:
-    """(B, L) ids -> (B, L, D); exact ``take(table, clip(ids))`` semantics,
-    via the row-sharded psum path when the plan shards this table."""
-    if _plan_shards(plan, vocab):
-        return sharded_seq_lookup(table, ids, mesh=plan.mesh, vocab=vocab,
-                                  model_axis=plan.model_axis,
-                                  batch_axes=plan.batch_axes)
-    return jnp.take(table, jnp.clip(ids, 0, vocab - 1), axis=0)
-
-
-def plan_row_lookup(table: jnp.ndarray, ids: jnp.ndarray, *, vocab: int,
-                    plan=None) -> jnp.ndarray:
-    """(B,) ids -> (B, D); sharded single-row gather under the plan."""
-    if _plan_shards(plan, vocab):
-        return sharded_row_lookup(table, ids, mesh=plan.mesh, vocab=vocab,
-                                  model_axis=plan.model_axis,
-                                  batch_axes=plan.batch_axes)
-    return jnp.take(table, jnp.clip(ids, 0, vocab - 1), axis=0)
-
-
-def plan_bag_lookup(table: jnp.ndarray, ids: JaggedTensor,
-                    pooling: str = "sum", *, plan=None) -> jnp.ndarray:
-    """Jagged bag lookup, psum path when the plan shards this table.
-
-    max pooling never routes sharded (a psum cannot reassemble a max)."""
-    if pooling in ("sum", "mean") and _plan_shards(plan, table.shape[0]):
-        return sharded_jagged_bag_lookup(table, ids, mesh=plan.mesh,
-                                         vocab=table.shape[0],
-                                         pooling=pooling,
-                                         model_axis=plan.model_axis)
-    return bag_lookup(table, ids, pooling)
-
-
-def plan_bag_lookup_dense(table: jnp.ndarray, ids: jnp.ndarray,
-                          lengths: jnp.ndarray, pooling: str = "sum", *,
-                          vocab: Optional[int] = None,
-                          plan=None) -> jnp.ndarray:
-    """Padded-layout bag lookup, psum path when the plan shards this table.
-
-    max pooling never routes sharded (a psum cannot reassemble a max)."""
-    vocab = vocab if vocab is not None else table.shape[0]
-    if pooling in ("sum", "mean") and _plan_shards(plan, vocab):
-        # clip first: the sharded partial-bag zeroes out-of-range ids while
-        # bag_lookup_dense clips them — parity requires clip-then-shard
-        return sharded_bag_lookup(table, jnp.clip(ids, 0, vocab - 1), lengths,
-                                  mesh=plan.mesh, vocab=vocab, pooling=pooling,
-                                  model_axis=plan.model_axis,
-                                  batch_axes=plan.batch_axes)
-    return bag_lookup_dense(table, ids, lengths, pooling)
+# NOTE: the plan-routed lookups (plan_seq_lookup & friends) moved into
+# repro/embeddings/collection.py — the single embedding entry point — where
+# the ShardingPlan decision additionally composes with request-level dedup
+# and the GatheredTable sparse-training proxy. This module keeps only the
+# explicit shard_map collectives the collection routes to.
 
 
 def sharded_bag_lookup_rs(table: jnp.ndarray, ids: jnp.ndarray,

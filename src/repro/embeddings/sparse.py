@@ -1,0 +1,287 @@
+"""Sparse embedding gradients: COO row gradients + the gathered-rows proxy.
+
+The dense training path materializes a full ``(V, D)`` gradient for every
+embedding table on every step — and row-wise Adagrad then reads and writes
+all V rows even though a batch touches a few thousand. This module keeps the
+sparse structure alive end-to-end:
+
+  * :class:`SparseRows` — a registered pytree holding a COO row gradient
+    ``(ids, rows)`` for a ``(vocab, D)`` table. It flows through
+    ``value_and_grad`` output trees, the grad-accumulation scan in
+    ``train/loop.py`` (stacked along the scan axis, then flattened), and the
+    sparse apply path of ``train/optim.rowwise_adagrad``.
+  * :class:`GatheredTable` — the request's unique rows of a table, gathered
+    once from HBM. It quacks like the ``(V, D)`` array for every lookup in
+    ``embeddings/collection.py``, so model code is identical in dense and
+    sparse mode; differentiating w.r.t. its ``rows`` yields exactly the
+    touched-row gradient.
+  * :func:`make_sparse_value_and_grad` — wraps a model loss so that
+    ``value_and_grad`` runs against gathered rows instead of full tables:
+    the returned grads tree carries :class:`SparseRows` at every table leaf
+    and plain dense arrays everywhere else.
+
+Why a proxy instead of a ``custom_vjp`` that returns ``SparseRows`` for a
+dense table argument: JAX requires a cotangent structurally identical to the
+primal, so a ``(V, D)`` input can only ever receive a ``(V, D)`` cotangent.
+Gathering first and differentiating w.r.t. the gathered rows is the one
+shape under which the sparsity legally survives the autodiff boundary —
+the same reason TorchRec keeps its embedding backward fused.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SparseRows:
+    """COO row-sparse gradient of a ``(vocab, D)`` embedding table.
+
+    ``ids[i]`` is the table row that ``rows[i]`` contributes to; ids may
+    repeat (contributions add, matching dense scatter semantics) and entries
+    with ``ids == vocab`` are padding (dropped by every consumer).
+    ``unique=True`` (static) marks ids as already unique+sorted — the
+    layout ``gather_table`` produces — letting :meth:`merged` skip its
+    per-step sort; producers that concatenate or stack COO entries must
+    leave it False.
+    """
+
+    ids: jnp.ndarray     # (N,) int32; vocab == padding sentinel
+    rows: jnp.ndarray    # (N, D) float contributions
+    vocab: int           # static table height
+    unique: bool = False
+
+    def tree_flatten(self):
+        return (self.ids, self.rows), (self.vocab, self.unique)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return (self.vocab,) + tuple(self.rows.shape[1:])
+
+    @property
+    def dtype(self):
+        return self.rows.dtype
+
+    def merged(self) -> "SparseRows":
+        """Duplicate-id merge: unique ids, contributions segment-summed.
+
+        The result has the same static capacity (padded with the ``vocab``
+        sentinel) so it stays jit-stable; padding rows are zero. A no-op
+        for already-unique COO (the single-batch sparse training path).
+        """
+        if self.unique:
+            return self
+        n = self.ids.shape[0]
+        uids, inv = jnp.unique(self.ids, size=n, fill_value=self.vocab,
+                               return_inverse=True)
+        rows = jnp.zeros_like(self.rows).at[inv.reshape(-1)].add(self.rows)
+        return SparseRows(uids.astype(jnp.int32), rows, self.vocab,
+                          unique=True)
+
+    def to_dense(self) -> jnp.ndarray:
+        """Densify to the ``(vocab, D)`` scatter-add — for parity tests and
+        the dense cotangent of kernels/embedding_bag.py."""
+        out = jnp.zeros(self.shape, self.rows.dtype)
+        return out.at[self.ids].add(self.rows, mode="drop")
+
+    def scale(self, s) -> "SparseRows":
+        return SparseRows(self.ids, self.rows * s, self.vocab, self.unique)
+
+
+def is_sparse(x) -> bool:
+    return isinstance(x, SparseRows)
+
+
+def sq_sum(g) -> jnp.ndarray:
+    """Sum of squared gradient entries for one grads leaf (SparseRows or
+    dense) — the grad-norm term ``train/loop.py`` logs. For SparseRows the
+    UNMERGED contributions are squared (duplicate ids are not summed
+    first, so same-sign duplicates bias the logged norm low vs the dense
+    run) — a deliberate approximation: merging costs a per-table sort on
+    every step for a metric that only gets logged."""
+    if is_sparse(g):
+        return jnp.sum(jnp.square(g.rows.astype(jnp.float32)))
+    return jnp.sum(jnp.square(g.astype(jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# Grad-accumulation support: split a grads tree into its dense part (scan
+# carry) and its SparseRows part (scan ys, stacked then flattened).
+# ---------------------------------------------------------------------------
+
+def split_sparse(grads):
+    """-> (dense_tree, sparse_tree); each has None at the other's slots."""
+    dense = jax.tree_util.tree_map(lambda g: None if is_sparse(g) else g,
+                                   grads, is_leaf=is_sparse)
+    sparse = jax.tree_util.tree_map(lambda g: g if is_sparse(g) else None,
+                                    grads, is_leaf=is_sparse)
+    return dense, sparse
+
+
+def merge_sparse(dense, sparse):
+    """Inverse of :func:`split_sparse` given congruent trees."""
+    if sparse is None:
+        return dense
+    if dense is None:
+        return sparse
+    if isinstance(dense, dict):
+        return {k: merge_sparse(dense.get(k), sparse.get(k))
+                for k in set(dense) | set(sparse)}
+    if isinstance(dense, (list, tuple)):
+        return type(dense)(merge_sparse(d, s) for d, s in zip(dense, sparse))
+    return dense
+
+
+def flatten_stacked(sparse_stacked, scale: float = 1.0):
+    """Collapse scan-stacked SparseRows — ids (M, N), rows (M, N, D) — back
+    into flat COO, scaling rows (the 1/microbatches mean). Stacking
+    reintroduces duplicate ids across microbatches, so the result is
+    NOT marked unique (the optimizer's merge folds them)."""
+    def leaf(g):
+        if not is_sparse(g):
+            return g
+        d = g.rows.shape[2:]
+        return SparseRows(g.ids.reshape(-1),
+                          g.rows.reshape((-1,) + d) * scale, g.vocab)
+    return jax.tree_util.tree_map(leaf, sparse_stacked, is_leaf=is_sparse)
+
+
+# ---------------------------------------------------------------------------
+# GatheredTable: the lookup-side proxy.
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class GatheredTable:
+    """The unique rows of one table touched by the current batch.
+
+    ``uids`` is sorted ascending with ``vocab`` sentinels padding the tail
+    (the ``jnp.unique(..., size=, fill_value=vocab)`` layout), so id ->
+    local-row translation is a ``searchsorted``. Ids absent from ``uids``
+    read as zero rows — structurally impossible when the model's
+    ``table_ids`` declaration covers its lookups, and loudly wrong in the
+    sparse-vs-dense parity tests when it doesn't.
+    """
+
+    uids: jnp.ndarray    # (N,) int32 sorted; vocab == padding
+    rows: jnp.ndarray    # (N, D)
+    vocab: int
+
+    def tree_flatten(self):
+        return (self.uids, self.rows), self.vocab
+
+    @classmethod
+    def tree_unflatten(cls, vocab, children):
+        return cls(children[0], children[1], vocab)
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return (self.vocab,) + tuple(self.rows.shape[1:])
+
+    @property
+    def dtype(self):
+        return self.rows.dtype
+
+    def take(self, ids: jnp.ndarray) -> jnp.ndarray:
+        """``jnp.take(table, ids, axis=0)`` semantics for in-range ids."""
+        ids = jnp.clip(ids, 0, self.vocab - 1).astype(jnp.int32)
+        pos = jnp.searchsorted(self.uids, ids)
+        pos = jnp.clip(pos, 0, self.uids.shape[0] - 1)
+        hit = jnp.take(self.uids, pos) == ids
+        emb = jnp.take(self.rows, pos, axis=0)
+        return emb * hit[..., None].astype(emb.dtype)
+
+
+# ---------------------------------------------------------------------------
+# The sparse training entry point.
+# ---------------------------------------------------------------------------
+
+def _get_path(tree, path: str):
+    for k in path.split("/"):
+        tree = tree[k]
+    return tree
+
+
+def _set_path(tree, path: str, value):
+    keys = path.split("/")
+    if len(keys) == 1:
+        out = dict(tree)
+        out[keys[0]] = value
+        return out
+    out = dict(tree)
+    out[keys[0]] = _set_path(tree[keys[0]], "/".join(keys[1:]), value)
+    return out
+
+
+def gather_table(table: jnp.ndarray, ids: jnp.ndarray) -> GatheredTable:
+    """Dedup-gather the batch's rows of one table: unique ids (one HBM read
+    per distinct id) -> :class:`GatheredTable`."""
+    vocab = table.shape[0]
+    flat = jnp.clip(ids.reshape(-1), 0, vocab - 1).astype(jnp.int32)
+    uids = jnp.unique(flat, size=flat.shape[0], fill_value=vocab)
+    rows = jnp.take(table, jnp.minimum(uids, vocab - 1), axis=0)
+    return GatheredTable(uids.astype(jnp.int32), rows, vocab)
+
+
+# tables below this stay dense even when declared: gathering + sorting a
+# batch worth of COO rows to update a handful of table rows costs more
+# than the dense apply it replaces (same reasoning as spmd.SHARD_MIN_ROWS)
+SPARSE_MIN_VOCAB = 64
+
+
+def make_sparse_value_and_grad(loss_fn: Callable,
+                               table_ids_fn: Callable,
+                               min_vocab: int = SPARSE_MIN_VOCAB) -> Callable:
+    """Sparse-gradient ``value_and_grad`` for an embedding-heavy loss.
+
+    ``loss_fn(params, batch, rng) -> scalar`` must route every lookup of the
+    declared tables through ``embeddings/collection.py`` (which accepts the
+    :class:`GatheredTable` proxy). ``table_ids_fn(batch) -> {path: ids}``
+    declares, per table (a ``/``-joined params path), every id the forward
+    will look up — models export these next to their losses
+    (``lsr_table_ids``, ``dlrm_table_ids``, ...). Declared tables below
+    ``min_vocab`` rows keep the plain dense gradient path.
+
+    Returns ``vag(params, batch, rng) -> (loss, grads)`` where ``grads`` has
+    a :class:`SparseRows` at each declared table path and plain dense arrays
+    elsewhere; drop it into ``make_train_step(value_and_grad_fn=...)``.
+    """
+    def vag(params, batch, rng):
+        ids_map: Dict[str, jnp.ndarray] = table_ids_fn(batch)
+        ids_map = {p: ids for p, ids in ids_map.items()
+                   if _get_path(params, p).shape[0] >= min_vocab}
+        gathered = {p: gather_table(_get_path(params, p), ids)
+                    for p, ids in ids_map.items()}
+        # tables leave the differentiated tree entirely: a replaced-but-
+        # present (V, D) leaf would come back as a dense zeros gradient,
+        # which is the exact allocation the sparse path exists to avoid
+        stripped = params
+        for p in ids_map:
+            stripped = _set_path(stripped, p, None)
+        rows0 = {p: g.rows for p, g in gathered.items()}
+
+        def inner(rows_map, dense_params):
+            full = dense_params
+            for p, rows in rows_map.items():
+                g = gathered[p]
+                full = _set_path(full, p, GatheredTable(g.uids, rows, g.vocab))
+            return loss_fn(full, batch, rng)
+
+        loss, (g_rows, g_dense) = jax.value_and_grad(
+            inner, argnums=(0, 1))(rows0, stripped)
+        grads = g_dense
+        for p, gr in g_rows.items():
+            g = gathered[p]
+            grads = _set_path(grads, p,
+                              SparseRows(g.uids, gr, g.vocab, unique=True))
+        return loss, grads
+
+    return vag

@@ -1,7 +1,7 @@
-"""Backend dispatch for HSTU attention — the one place that decides how the
-repo's hottest compute path executes.
+"""Backend dispatch — the one place that decides how the repo's hot compute
+paths execute: HSTU attention and the embedding-bag lookup.
 
-Backends (see docs/KERNELS.md for the full table):
+HSTU backends (see docs/KERNELS.md for the full table):
 
   pallas           — fused Pallas TPU kernel, forward + backward
                      (``jax.custom_vjp``), compiled (``interpret=False``)
@@ -21,6 +21,15 @@ elsewhere). Explicitly configured knobs beat the ambient env var so an
 exported debug override cannot silently win over a CLI flag or a pinned
 ``ServeConfig``. Backend resolution happens at trace time, so a jit'd
 train step bakes in whichever backend was active when it first ran.
+
+Embedding-bag backends (docs/EMBEDDINGS.md) follow the same precedence with
+their own knob set (``REPRO_EMB_BACKEND`` env var, ``set_default_emb_backend``,
+``use_emb_backend``):
+
+  pallas           — fused Pallas TPU kernel (kernels/embedding_bag.py),
+                     forward + COO-row backward (``jax.custom_vjp``)
+  pallas-interpret — same kernels through the Pallas interpreter
+  jnp              — take + masked reduce oracle (kernels/ref.py)
 """
 from __future__ import annotations
 
@@ -80,6 +89,57 @@ def resolve_backend(backend: Optional[str] = None) -> str:
         if cand:
             return _validate(cand)
     return "pallas" if jax.default_backend() == "tpu" else "jnp-chunked"
+
+
+# ---------------------------------------------------------------------------
+# Embedding-bag backend knobs (same precedence ladder as HSTU, own namespace)
+# ---------------------------------------------------------------------------
+
+EMB_BACKENDS = ("pallas", "pallas-interpret", "jnp")
+EMB_ENV_VAR = "REPRO_EMB_BACKEND"
+
+_default_emb_backend: Optional[str] = None
+_scoped_emb_backend: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_emb_scoped_backend", default=None)
+
+
+def _validate_emb(backend: str) -> str:
+    if backend not in EMB_BACKENDS:
+        raise ValueError(f"unknown embedding-bag backend {backend!r}; "
+                         f"expected one of {EMB_BACKENDS}")
+    return backend
+
+
+def set_default_emb_backend(backend: Optional[str]) -> None:
+    """Process-wide default (used by launch/train.py --emb-backend)."""
+    global _default_emb_backend
+    _default_emb_backend = (_validate_emb(backend)
+                            if backend is not None else None)
+
+
+def get_default_emb_backend() -> Optional[str]:
+    return _default_emb_backend
+
+
+@contextlib.contextmanager
+def use_emb_backend(backend: Optional[str]):
+    """Scoped embedding-bag backend override; ``None`` is a no-op."""
+    if backend is None:
+        yield
+        return
+    token = _scoped_emb_backend.set(_validate_emb(backend))
+    try:
+        yield
+    finally:
+        _scoped_emb_backend.reset(token)
+
+
+def resolve_emb_backend(backend: Optional[str] = None) -> str:
+    for cand in (backend, _scoped_emb_backend.get(), _default_emb_backend,
+                 os.environ.get(EMB_ENV_VAR)):
+        if cand:
+            return _validate_emb(cand)
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
 
 
 def hstu_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

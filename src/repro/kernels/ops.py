@@ -38,11 +38,16 @@ def hstu_attention(q, k, v, rab, hist_lengths, target_counts, *,
                                     max_rel_pos=max_rel_pos)
 
 
-@partial(jax.jit, static_argnames=("use_pallas",))
-def embedding_bag(table, ids, lengths, *, use_pallas: str = "never"):
+@partial(jax.jit, static_argnames=("use_pallas", "pooling"))
+def embedding_bag(table, ids, lengths, *, pooling: str = "sum",
+                  use_pallas: str = "never"):
     if use_pallas == "never":
-        return _ref.embedding_bag_ref(table, ids, lengths)
-    return _bag_pallas(table, ids, lengths, interpret=not _on_tpu())
+        return _ref.embedding_bag_ref(table, ids, lengths, pooling)
+    if use_pallas == "always":
+        backend = "pallas" if _on_tpu() else "pallas-interpret"
+    else:                      # "auto": env/default/hardware resolution
+        backend = None
+    return _bag_pallas(table, ids, lengths, pooling, backend=backend)
 
 
 @partial(jax.jit, static_argnames=("use_pallas",))

@@ -48,13 +48,24 @@ def hstu_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
 
 def embedding_bag_ref(table: jnp.ndarray, ids: jnp.ndarray,
-                      lengths: jnp.ndarray) -> jnp.ndarray:
-    """Sum-pooled embedding bag. table: (V, D); ids: (B, L); lengths: (B,)."""
+                      lengths: jnp.ndarray,
+                      pooling: str = "sum") -> jnp.ndarray:
+    """Pooled embedding bag (sum | mean | max). table: (V, D); ids: (B, L);
+    lengths: (B,). Matches embeddings/bag.bag_lookup_dense semantics:
+    slots past ``lengths`` never contribute and empty bags give zeros."""
     b, l = ids.shape
     valid = jnp.arange(l)[None, :] < lengths[:, None]
     emb = jnp.take(table, jnp.clip(ids, 0, table.shape[0] - 1).reshape(-1),
                    axis=0).reshape(b, l, -1)
-    return jnp.sum(emb * valid[..., None].astype(emb.dtype), axis=1)
+    if pooling == "max":
+        neg = jnp.full_like(emb, jnp.finfo(emb.dtype).min)
+        emb = jnp.where(valid[..., None], emb, neg)
+        out = jnp.max(emb, axis=1)
+        return jnp.where((lengths > 0)[:, None], out, 0.0)
+    out = jnp.sum(emb * valid[..., None].astype(emb.dtype), axis=1)
+    if pooling == "mean":
+        out = out / jnp.maximum(lengths, 1).astype(out.dtype)[:, None]
+    return out
 
 
 def dot_interaction_ref(dense_out: jnp.ndarray,

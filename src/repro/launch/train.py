@@ -41,41 +41,94 @@ import jax
 import jax.numpy as jnp
 
 
-def _recsys_loss(arch: str, rng, plan=None):
+def _ne_metrics(logits_fn):
+    """NE of a model's primary binary head, surfaced in Trainer logs."""
+    from repro.train.metrics import make_ne_metrics
+    return make_ne_metrics(logits_fn)
+
+
+def _recsys_loss(arch: str, rng, plan=None, sparse: bool = False):
+    """-> (params, loss_fn, value_and_grad_fn | None, metrics_fn | None).
+
+    With ``sparse=True`` the archs that declare their per-table ids train
+    through ``make_sparse_value_and_grad``: COO row grads + touched-rows-
+    only row-wise Adagrad (docs/EMBEDDINGS.md).
+    """
     from repro.configs import roo_models as rm
+    from repro.embeddings.sparse import make_sparse_value_and_grad
+
+    def sparse_vag(loss_fn, table_ids_fn):
+        return (make_sparse_value_and_grad(loss_fn, table_ids_fn)
+                if sparse else None)
+
     if arch in ("roo-lsr",):
-        from repro.models.lsr import lsr_init, lsr_loss
+        from repro.models.lsr import (lsr_init, lsr_logits_roo, lsr_loss,
+                                      lsr_table_ids)
         cfg = rm.lsr_config("userarch_hstu")
-        return (lsr_init(rng, cfg),
-                lambda p, b, r: lsr_loss(p, cfg, b, plan=plan))
+        loss = lambda p, b, r: lsr_loss(p, cfg, b, plan=plan)
+        return (lsr_init(rng, cfg), loss,
+                sparse_vag(loss, lambda b: lsr_table_ids(cfg, b)),
+                _ne_metrics(lambda p, b: (
+                    lsr_logits_roo(p, cfg, b, plan=plan)[:, 0],
+                    b.labels[:, 0], b.impression_mask())))
     if arch == "roo-esr":
-        from repro.models.two_tower import esr_loss_roo, two_tower_init
+        from repro.models.two_tower import (esr_logits_roo, esr_loss_roo,
+                                            two_tower_init,
+                                            two_tower_table_ids)
         cfg = rm.esr_config()
-        return two_tower_init(rng, cfg), lambda p, b, r: esr_loss_roo(p, cfg, b)
+        loss = lambda p, b, r: esr_loss_roo(p, cfg, b)
+        return (two_tower_init(rng, cfg), loss,
+                sparse_vag(loss, lambda b: two_tower_table_ids(cfg, b)),
+                _ne_metrics(lambda p, b: (esr_logits_roo(p, cfg, b),
+                                          b.labels[:, 0],
+                                          b.impression_mask())))
     if arch == "roo-retrieval":
-        from repro.models.two_tower import retrieval_loss_roo, two_tower_init
+        from repro.models.two_tower import (retrieval_loss_roo,
+                                            two_tower_init,
+                                            two_tower_table_ids)
         cfg = rm.retrieval_config()
-        return (two_tower_init(rng, cfg),
-                lambda p, b, r: retrieval_loss_roo(p, cfg, b))
+        loss = lambda p, b, r: retrieval_loss_roo(p, cfg, b)
+        return (two_tower_init(rng, cfg), loss,
+                sparse_vag(loss, lambda b: two_tower_table_ids(cfg, b)),
+                None)
     if arch == "hstu-gr":
-        from repro.models.gr import gr_init, gr_ranking_loss
+        from repro.models.gr import (gr_init, gr_ranking_logits,
+                                     gr_ranking_loss, gr_table_ids)
         cfg = rm.gr_config(hist_len=64)
-        return (gr_init(rng, cfg),
-                lambda p, b, r: gr_ranking_loss(p, cfg, b, plan=plan))
+        loss = lambda p, b, r: gr_ranking_loss(p, cfg, b, plan=plan)
+        return (gr_init(rng, cfg), loss,
+                sparse_vag(loss, lambda b: gr_table_ids(cfg, b)),
+                _ne_metrics(lambda p, b: (
+                    gr_ranking_logits(p, cfg, b, plan=plan)[:, 0],
+                    b.labels[:, 0], b.impression_mask())))
     if arch == "mind":
-        from repro.models.mind import MINDConfig, mind_init, mind_loss
+        from repro.models.mind import (MINDConfig, mind_init, mind_loss,
+                                       mind_table_ids)
         cfg = MINDConfig(n_items=50000)
-        return mind_init(rng, cfg), lambda p, b, r: mind_loss(p, cfg, b)
+        loss = lambda p, b, r: mind_loss(p, cfg, b)
+        return (mind_init(rng, cfg), loss,
+                sparse_vag(loss, lambda b: mind_table_ids(cfg, b)), None)
     if arch == "bert4rec":
         from repro.models.bert4rec import (BERT4RecConfig, bert4rec_init,
                                            bert4rec_loss)
+        if sparse:
+            raise SystemExit("bert4rec's cloze head is a full softmax over "
+                             "item_emb — dense by construction; drop "
+                             "--sparse-emb")
         cfg = BERT4RecConfig(n_items=50000, seq_len=65)
         return (bert4rec_init(rng, cfg),
-                lambda p, b, r: bert4rec_loss(p, cfg, b, r))
+                lambda p, b, r: bert4rec_loss(p, cfg, b, r), None, None)
     if arch == "dien":
-        from repro.models.din_dien import DIENConfig, dien_init, dien_loss
+        from repro.models.din_dien import (DIENConfig, dien_init,
+                                           dien_logits_roo, dien_loss,
+                                           dien_table_ids)
         cfg = DIENConfig(n_items=50000, seq_len=64)
-        return dien_init(rng, cfg), lambda p, b, r: dien_loss(p, cfg, b)
+        loss = lambda p, b, r: dien_loss(p, cfg, b)
+        return (dien_init(rng, cfg), loss,
+                sparse_vag(loss, lambda b: dien_table_ids(cfg, b)),
+                _ne_metrics(lambda p, b: (dien_logits_roo(p, cfg, b),
+                                          b.labels[:, 0],
+                                          b.impression_mask())))
     raise KeyError(arch)
 
 
@@ -91,6 +144,19 @@ def main() -> None:
                              "jnp-dense"),
                     help="HSTU attention backend (default: auto — fused "
                          "Pallas kernel on TPU, chunked jnp elsewhere)")
+    ap.add_argument("--emb-backend", default=None,
+                    choices=("pallas", "pallas-interpret", "jnp"),
+                    help="embedding-bag backend (default: auto — fused "
+                         "Pallas kernel on TPU, jnp elsewhere)")
+    ap.add_argument("--sparse-emb", action="store_true",
+                    help="train embedding tables with COO row gradients + "
+                         "touched-rows-only row-wise Adagrad (recsys archs "
+                         "with a table_ids declaration; see "
+                         "docs/EMBEDDINGS.md)")
+    ap.add_argument("--emb-dedup", default=None,
+                    choices=("auto", "always", "never"),
+                    help="request-level id dedup before embedding lookups "
+                         "(default auto: tables >= 4096 rows)")
     ap.add_argument("--data", default="memory", choices=("memory", "disk"),
                     help="recsys data path: in-memory batches (default) or "
                          "the disk-backed shard pipeline with prefetch + "
@@ -116,6 +182,12 @@ def main() -> None:
     if args.attn_backend:
         from repro.kernels.dispatch import set_default_backend
         set_default_backend(args.attn_backend)
+    if args.emb_backend:
+        from repro.kernels.dispatch import set_default_emb_backend
+        set_default_emb_backend(args.emb_backend)
+    if args.emb_dedup:
+        from repro.embeddings.collection import set_dedup_policy
+        set_dedup_policy(args.emb_dedup)
     rng = jax.random.PRNGKey(0)
 
     plan = None
@@ -200,7 +272,17 @@ def main() -> None:
     # recsys: real data pipeline + real training
     from repro.data.batcher import BatcherConfig
     from repro.data.events import EventSimulator, EventStreamConfig
-    params, loss_fn = _recsys_loss(args.arch, rng, plan=plan)
+    if args.sparse_emb and plan is not None:
+        # the GatheredTable proxy gathers rows locally, bypassing the psum
+        # lookups a row-sharded table needs — pick one regime per run
+        raise SystemExit("--sparse-emb and --mesh are mutually exclusive: "
+                         "sparse row grads assume locally-addressable "
+                         "tables (see docs/EMBEDDINGS.md)")
+    params, loss_fn, vag_fn, metrics_fn = _recsys_loss(
+        args.arch, rng, plan=plan, sparse=args.sparse_emb)
+    if args.sparse_emb and vag_fn is None:
+        raise SystemExit(f"{args.arch} has no table_ids declaration; "
+                         f"--sparse-emb unsupported")
     n_data_shards = 1
     if plan is not None:
         from repro.distributed.spmd import data_shard_count
@@ -218,7 +300,8 @@ def main() -> None:
     trainer = Trainer(loss_fn, opt,
                       TrainLoopConfig(total_steps=args.steps, log_every=10,
                                       ckpt_dir=args.ckpt_dir, ckpt_every=100),
-                      lambda: params, plan=plan)
+                      lambda: params, plan=plan,
+                      value_and_grad_fn=vag_fn, metrics_fn=metrics_fn)
     t0 = time.time()
     if args.data == "disk":
         from repro.pipeline import (OnlineJoinConfig, WatermarkJoiner,
@@ -275,8 +358,11 @@ def main() -> None:
 
         state = trainer.run(batch_iter, rng)
     dt = time.time() - t0
-    print(f"[{args.arch}] {int(state['step'])} steps in {dt:.1f}s; "
-          f"final loss {trainer.history[-1]['loss']:.4f}")
+    # history only fills every log_every steps; short runs end with none
+    last = trainer.history[-1] if trainer.history else {}
+    tail = f"; final loss {last['loss']:.4f}" if "loss" in last else ""
+    tail += f"; NE {last['ne']:.4f}" if "ne" in last else ""
+    print(f"[{args.arch}] {int(state['step'])} steps in {dt:.1f}s{tail}")
 
 
 if __name__ == "__main__":

@@ -7,6 +7,11 @@ self-attention over the user's item sequence, trained with the cloze
 ROO applicability: the encoder consumes only the user history (RO). Under
 ROO it runs once per request; the m candidates are scored against the
 encoded representation at the mask position. Encoder-only: no decode shapes.
+
+Embedding path: lookups route through embeddings/collection.py (dedup'd
+gathers), but the cloze head's full softmax (``enc @ item_emb.T``) reads
+every table row, so BERT4Rec trains with dense embedding gradients — it is
+the one model without a ``table_ids`` declaration for the sparse path.
 """
 from __future__ import annotations
 
@@ -18,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.core.roo_batch import ROOBatch
 from repro.core.fanout import fanout
+from repro.embeddings import collection as ec
 from repro.models.mlp import mlp_apply, mlp_init
 
 MASK_TOKEN = 1   # reserved id
@@ -66,7 +72,7 @@ def encode(params: Dict, cfg: BERT4RecConfig, ids: jnp.ndarray,
     """ids: (B, S) -> (B, S, d) bidirectional encoding (valid-masked)."""
     b, s = ids.shape
     d, h = cfg.embed_dim, cfg.n_heads
-    x = jnp.take(params["item_emb"], jnp.clip(ids, 0, cfg.n_items - 1), axis=0)
+    x = ec.seq_lookup(params["item_emb"], ids, vocab=cfg.n_items)
     x = x + params["pos_emb"][None, :s]
     valid = (jnp.arange(s)[None] < lengths[:, None])
     attn_mask = valid[:, None, None, :]                     # keys must be valid
@@ -120,8 +126,8 @@ def score_candidates_roo(params: Dict, cfg: BERT4RecConfig,
     enc = encode(params, cfg, ids_ext, lengths + 1)          # (B_RO, S, d)
     q = enc[jnp.arange(b), lengths]                          # (B_RO, d) @ MASK
     q_nro = fanout(q, batch.segment_ids)                     # (B_NRO, d)
-    cand = jnp.take(params["item_emb"],
-                    jnp.clip(batch.item_ids, 0, cfg.n_items - 1), axis=0)
+    cand = ec.row_lookup(params["item_emb"], batch.item_ids,
+                         vocab=cfg.n_items)
     return jnp.sum(q_nro * cand, axis=-1) + jnp.take(
         params["out_bias"], jnp.clip(batch.item_ids, 0, cfg.n_items - 1))
 

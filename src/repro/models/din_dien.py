@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.core.fanout import fanout
 from repro.core.roo_batch import ROOBatch
+from repro.embeddings import collection as ec
 from repro.models.mlp import mlp_apply, mlp_init
 
 
@@ -112,8 +113,7 @@ def dien_logits_roo(params: Dict, cfg: DIENConfig, batch: ROOBatch) -> jnp.ndarr
     t = cfg.seq_len
     hist_ids = batch.history_ids[:, :t]
     lengths = jnp.minimum(batch.history_lengths, t)
-    hist = jnp.take(params["item_emb"],
-                    jnp.clip(hist_ids, 0, cfg.n_items - 1), axis=0)
+    hist = ec.seq_lookup(params["item_emb"], hist_ids, vocab=cfg.n_items)
     # ---- RO: interest extraction runs once per request ----------------------
     states = gru_scan(params["gru"], hist, lengths)           # (B_RO, T, h)
     # ---- fanout hidden states + history embeddings once ---------------------
@@ -121,8 +121,7 @@ def dien_logits_roo(params: Dict, cfg: DIENConfig, batch: ROOBatch) -> jnp.ndarr
     hist_nro = fanout(hist, batch.segment_ids)
     len_nro = fanout(lengths, batch.segment_ids)
     # ---- NRO: target attention + AUGRU --------------------------------------
-    tgt = jnp.take(params["item_emb"],
-                   jnp.clip(batch.item_ids, 0, cfg.n_items - 1), axis=0)
+    tgt = ec.row_lookup(params["item_emb"], batch.item_ids, vocab=cfg.n_items)
     tgt_h = mlp_apply(params["h_proj"], tgt)                  # (B_NRO, h)
     att_in = jnp.concatenate([
         states_nro, jnp.broadcast_to(tgt_h[:, None, :], states_nro.shape),
@@ -136,6 +135,13 @@ def dien_logits_roo(params: Dict, cfg: DIENConfig, batch: ROOBatch) -> jnp.ndarr
     ro_dense_nro = fanout(batch.ro_dense, batch.segment_ids)
     x = jnp.concatenate([h_final, tgt, ro_dense_nro], axis=-1)
     return mlp_apply(params["out_mlp"], x)[:, 0]
+
+
+def dien_table_ids(cfg: DIENConfig, batch: ROOBatch) -> Dict:
+    """Per-table id declaration for sparse-gradient training."""
+    return {"item_emb": jnp.concatenate([
+        batch.history_ids[:, :cfg.seq_len].reshape(-1),
+        batch.item_ids.reshape(-1)])}
 
 
 def dien_loss(params: Dict, cfg: DIENConfig, batch: ROOBatch) -> jnp.ndarray:

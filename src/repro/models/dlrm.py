@@ -17,8 +17,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.fanout import fanout
-from repro.embeddings.sharded import (EmbeddingCollectionConfig, TableConfig,
-                                      init_tables, plan_bag_lookup_dense)
+from repro.embeddings.collection import (EmbeddingCollection,
+                                         EmbeddingCollectionConfig,
+                                         FeatureSpec, TableConfig,
+                                         bag_lookup_dense)
 from repro.models.interactions import dot_interaction
 from repro.models.mlp import mlp_apply, mlp_init
 
@@ -59,6 +61,14 @@ class DLRMConfig:
                         side="ro" if i < self.n_ro_fields else "nro")
             for i, v in enumerate(self.vocabs)))
 
+    def collection(self) -> EmbeddingCollection:
+        """The named embedding entry point: one multi-hot bag feature per
+        sparse field, routed to its table."""
+        return EmbeddingCollection(self.tables(), tuple(
+            FeatureSpec(name=f"f{i}", table=f"t{i}", kind="bag",
+                        pooling="sum")
+            for i in range(self.n_sparse)))
+
     def top_in_dim(self) -> int:
         f = self.n_sparse + 1
         return self.embed_dim + f * (f - 1) // 2
@@ -68,7 +78,7 @@ def dlrm_init(rng: jax.Array, cfg: DLRMConfig, dtype=jnp.float32) -> Dict:
     k1, k2, k3 = jax.random.split(rng, 3)
     top_dims = (cfg.top_in_dim(),) + cfg.top_mlp[1:]
     return {
-        "tables": init_tables(k1, cfg.tables(), dtype),
+        "tables": cfg.collection().init(k1, dtype),
         "bot_mlp": mlp_init(k2, cfg.bot_mlp, dtype),
         "top_mlp": mlp_init(k3, top_dims, dtype),
     }
@@ -78,14 +88,15 @@ def _field_lookup(params: Dict, cfg: DLRMConfig, ids: jnp.ndarray,
                   lengths: jnp.ndarray, fields, plan=None) -> jnp.ndarray:
     """ids: (B, n_fields, multi_hot) -> (B, n_fields, D).
 
-    Under an SPMD ``plan`` each row-sharded table's bag is an explicit
-    psum over ``model`` (embeddings/sharded.py); RO fields run at B_RO, so
-    their collectives move B_RO·D instead of B_NRO·D bytes."""
+    Routed through the embedding collection: dedup'd local gathers (or the
+    Pallas bag kernel on TPU), and under an SPMD ``plan`` each row-sharded
+    table's bag is an explicit psum over ``model`` — RO fields run at B_RO,
+    so their collectives move B_RO·D instead of B_NRO·D bytes."""
     embs = []
     for j, i_field in enumerate(fields):
         tbl = params["tables"][f"t{i_field}"]
-        embs.append(plan_bag_lookup_dense(tbl, ids[:, j, :], lengths[:, j],
-                                          plan=plan))
+        embs.append(bag_lookup_dense(tbl, ids[:, j, :], lengths[:, j],
+                                     plan=plan))
     return jnp.stack(embs, axis=1)
 
 
@@ -137,6 +148,19 @@ def dlrm_forward_impression(params: Dict, cfg: DLRMConfig,
     embs = _field_lookup(params, cfg, ids, lengths, range(cfg.n_sparse), plan)
     z = dot_interaction(dense_out, embs)
     return mlp_apply(params["top_mlp"], z)[:, 0]
+
+
+def dlrm_table_ids(cfg: DLRMConfig, ro_ids: jnp.ndarray,
+                   nro_ids: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Per-table flat id sets of one ROO batch (params-tree paths), for
+    ``embeddings.sparse.make_sparse_value_and_grad`` — folded through the
+    collection's feature routing so declaration and lookup cannot drift."""
+    feats = {}
+    for j, f in enumerate(range(cfg.n_ro_fields)):
+        feats[f"f{f}"] = ro_ids[:, j]
+    for j, f in enumerate(range(cfg.n_ro_fields, cfg.n_sparse)):
+        feats[f"f{f}"] = nro_ids[:, j]
+    return cfg.collection().request_ids(feats, prefix="tables/")
 
 
 def dlrm_flops_per_example(cfg: DLRMConfig) -> int:

@@ -24,7 +24,7 @@ from repro.core.masks import causal_spec
 from repro.core.roo_batch import ROOBatch
 from repro.core.sequence import (ROOSequenceConfig, encode_roo,
                                  gather_targets_to_ro, scatter_targets_to_nro)
-from repro.embeddings.sharded import plan_row_lookup, plan_seq_lookup
+from repro.embeddings import collection as ec
 from repro.models.mlp import mlp_apply, mlp_init
 
 
@@ -57,8 +57,8 @@ def _embed_history(params: Dict, cfg: GRConfig, batch: ROOBatch,
     ids = batch.history_ids[:, :cfg.hist_len]
     acts = batch.history_actions[:, :cfg.hist_len]
     # item table is row-sharded under an SPMD plan: one B_RO-sized psum
-    e = plan_seq_lookup(params["item_emb"], ids, vocab=cfg.n_items, plan=plan)
-    a = jnp.take(params["act_emb"], jnp.clip(acts, 0, 3), axis=0)
+    e = ec.seq_lookup(params["item_emb"], ids, vocab=cfg.n_items, plan=plan)
+    a = ec.seq_lookup(params["act_emb"], acts, vocab=4)
     return e + a
 
 
@@ -76,8 +76,8 @@ def gr_ranking_logits_from_history(params: Dict, cfg: GRConfig,
     """GR ranking logits given a precomputed history embedding
     (from ``gr_history_repr`` or a serving cache)."""
     lengths = jnp.minimum(batch.history_lengths, cfg.hist_len)
-    tgt_nro = plan_row_lookup(params["item_emb"], batch.item_ids,
-                              vocab=cfg.n_items, plan=plan)
+    tgt_nro = ec.row_lookup(params["item_emb"], batch.item_ids,
+                            vocab=cfg.n_items, plan=plan)
     tgt_ro = gather_targets_to_ro(tgt_nro, batch, cfg.m_targets)
     enc = encode_roo({"hstu": params["hstu"]}, cfg.seq_cfg(), hist, lengths,
                      tgt_ro, batch.num_impressions)          # (B_RO, m, d)
@@ -92,6 +92,16 @@ def gr_ranking_logits(params: Dict, cfg: GRConfig, batch: ROOBatch,
     return gr_ranking_logits_from_history(
         params, cfg, batch, gr_history_repr(params, cfg, batch, plan=plan),
         plan=plan)
+
+
+def gr_table_ids(cfg: GRConfig, batch: ROOBatch) -> Dict:
+    """Per-table id declaration for sparse-gradient training (ranking
+    path; retrieval adds the shifted next-item targets, already covered by
+    the history slice)."""
+    return {"item_emb": jnp.concatenate([
+                batch.history_ids[:, :cfg.hist_len].reshape(-1),
+                batch.item_ids.reshape(-1)]),
+            "act_emb": batch.history_actions[:, :cfg.hist_len].reshape(-1)}
 
 
 def gr_ranking_loss(params: Dict, cfg: GRConfig, batch: ROOBatch,
@@ -118,11 +128,11 @@ def gr_retrieval_loss(params: Dict, cfg: GRConfig, batch: ROOBatch,
     nxt = batch.history_ids[:, 1:cfg.hist_len]
     valid = (jnp.arange(cfg.hist_len - 1)[None] < (lengths - 1)[:, None])
     # sampled softmax against the in-batch item candidates
-    cand = plan_row_lookup(params["item_emb"], batch.item_ids,
-                           vocab=cfg.n_items, plan=plan)
+    cand = ec.row_lookup(params["item_emb"], batch.item_ids,
+                         vocab=cfg.n_items, plan=plan)
     logits = jnp.einsum("bnd,cd->bnc", q, cand) / temperature
-    tgt_emb = plan_seq_lookup(params["item_emb"], nxt, vocab=cfg.n_items,
-                              plan=plan)
+    tgt_emb = ec.seq_lookup(params["item_emb"], nxt, vocab=cfg.n_items,
+                            plan=plan)
     pos = jnp.sum(q * tgt_emb, axis=-1) / temperature        # (B_RO, n-1)
     lse = jnp.logaddexp(jax.scipy.special.logsumexp(logits, axis=-1), pos)
     nll = lse - pos

@@ -29,9 +29,7 @@ from repro.core.roo_batch import ROOBatch
 from repro.core.sequence import (ROOSequenceConfig, encode_roo,
                                  gather_targets_to_ro, roo_sequence_init,
                                  scatter_targets_to_nro)
-from repro.embeddings.bag import bag_lookup, bag_lookup_dense
-from repro.embeddings.sharded import (plan_bag_lookup, plan_row_lookup,
-                                      plan_seq_lookup)
+from repro.embeddings import collection as ec
 from repro.models.interactions import dcnv2_apply, dcnv2_init
 from repro.models.mlp import mlp_apply, mlp_init
 
@@ -104,33 +102,35 @@ def _user_side(params: Dict, cfg: LSRConfig, batch: ROOBatch,
                cats_override: jnp.ndarray = None, plan=None) -> jnp.ndarray:
     """All RO computation -> (B_RO, user_width). Runs at B_RO under ROO.
 
-    Under an SPMD ``plan`` the big tables are row-sharded over ``model``;
-    their lookups route through embeddings/sharded.py and each costs one
-    B_RO-sized psum — the RO-side collective ROO shrinks (§2.2, Fig. 3).
+    All embedding reads route through ``embeddings/collection.py``: dedup'd
+    gathers locally, explicit psum lookups when an SPMD ``plan`` row-shards
+    the table (each costs one B_RO-sized psum — the RO-side collective ROO
+    shrinks, §2.2 Fig. 3), and ``GatheredTable`` proxies transparently under
+    sparse-gradient training.
     """
     d = cfg.embed_dim
     dense = mlp_apply(params["dense_proj"], batch.ro_dense)          # (B_RO,d)
     if cats_override is not None:
         cats = cats_override
     elif batch.ro_sparse is not None:
-        cats = plan_bag_lookup(params["user_cat_emb"],
-                               batch.ro_sparse["user_ids"],
-                               pooling="mean", plan=plan)
+        cats = ec.bag_lookup(params["user_cat_emb"],
+                             batch.ro_sparse["user_ids"],
+                             pooling="mean", plan=plan)
     else:
         cats = jnp.zeros_like(dense)
     if cfg.mode in ("userarch_hstu", "hstu_ranking"):
-        hist_emb = plan_seq_lookup(params["item_emb"], batch.history_ids,
-                                   vocab=cfg.n_items, plan=plan)
-        act = jnp.take(params["act_emb"], jnp.clip(batch.history_actions, 0, 3),
-                       axis=0)
+        hist_emb = ec.seq_lookup(params["item_emb"], batch.history_ids,
+                                 vocab=cfg.n_items, plan=plan)
+        act = ec.seq_lookup(params["act_emb"], batch.history_actions, vocab=4)
         spec = causal_spec(batch.history_lengths, cfg.hist_len)
         enc = hstu_apply(params["hstu"], _hstu_cfg(cfg), hist_emb + act, spec)
         valid = (jnp.arange(cfg.hist_len)[None] < batch.history_lengths[:, None])
         hist = jnp.sum(enc * valid[..., None], 1) / jnp.maximum(
             batch.history_lengths, 1).astype(enc.dtype)[:, None]
     else:
-        hist = bag_lookup_dense(params["item_emb"], batch.history_ids,
-                                batch.history_lengths, pooling="mean")
+        hist = ec.bag_lookup_dense(params["item_emb"], batch.history_ids,
+                                   batch.history_lengths, pooling="mean",
+                                   vocab=cfg.n_items, plan=plan)
     feats = jnp.stack([dense, cats, hist], axis=1)                   # (B_RO,3,d)
     if "lce" in params:
         out = lce_apply(params["lce"], jnp.transpose(feats, (0, 2, 1)))
@@ -140,8 +140,8 @@ def _user_side(params: Dict, cfg: LSRConfig, batch: ROOBatch,
 
 def _item_side(params: Dict, cfg: LSRConfig, batch: ROOBatch,
                plan=None) -> jnp.ndarray:
-    emb = plan_row_lookup(params["item_emb"], batch.item_ids,
-                          vocab=cfg.n_items, plan=plan)
+    emb = ec.row_lookup(params["item_emb"], batch.item_ids,
+                        vocab=cfg.n_items, plan=plan)
     dense = mlp_apply(params["item_dense_proj"], batch.nro_dense)
     return jnp.concatenate([emb, dense], axis=-1)                    # (B_NRO,2d)
 
@@ -164,12 +164,11 @@ def lsr_logits_from_user(params: Dict, cfg: LSRConfig, batch: ROOBatch,
     item = _item_side(params, cfg, batch, plan=plan)
     if cfg.mode == "hstu_ranking":
         # ROO sequential targets: encode [history | m targets] once/request
-        hist_emb = plan_seq_lookup(params["item_emb"], batch.history_ids,
-                                   vocab=cfg.n_items, plan=plan)
-        act = jnp.take(params["act_emb"], jnp.clip(batch.history_actions, 0, 3),
-                       axis=0)
-        tgt_nro = plan_row_lookup(params["item_emb"], batch.item_ids,
-                                  vocab=cfg.n_items, plan=plan)
+        hist_emb = ec.seq_lookup(params["item_emb"], batch.history_ids,
+                                 vocab=cfg.n_items, plan=plan)
+        act = ec.seq_lookup(params["act_emb"], batch.history_actions, vocab=4)
+        tgt_nro = ec.row_lookup(params["item_emb"], batch.item_ids,
+                                vocab=cfg.n_items, plan=plan)
         tgt_ro = gather_targets_to_ro(tgt_nro, batch, cfg.m_targets)
         seq_cfg = ROOSequenceConfig(_hstu_cfg(cfg), cfg.hist_len, cfg.m_targets)
         enc = encode_roo(params["seq"], seq_cfg, hist_emb + act,
@@ -203,18 +202,17 @@ def lsr_logits_impression(params: Dict, cfg: LSRConfig, batch: ROOBatch) -> jnp.
         segment_ids=jnp.arange(batch.b_nro, dtype=jnp.int32))
     # the jagged user-cat bag cannot be row-duplicated without re-packing;
     # expand its pooled result instead (identical math per impression)
-    cats = bag_lookup(params["user_cat_emb"], batch.ro_sparse["user_ids"],
-                      pooling="mean") if batch.ro_sparse is not None else None
+    cats = ec.bag_lookup(params["user_cat_emb"], batch.ro_sparse["user_ids"],
+                         pooling="mean") if batch.ro_sparse is not None else None
     cats_nro = fanout(cats, batch.segment_ids) if cats is not None else None
     user = _user_side(params, cfg, fake, cats_override=cats_nro)  # at B_NRO — the duplicated work
     item = _item_side(params, cfg, fake)
     if cfg.mode == "hstu_ranking":
-        tgt = jnp.take(params["item_emb"],
-                       jnp.clip(fake.item_ids, 0, cfg.n_items - 1), axis=0)
-        hist_emb = jnp.take(params["item_emb"],
-                            jnp.clip(fake.history_ids, 0, cfg.n_items - 1), axis=0)
-        act = jnp.take(params["act_emb"],
-                       jnp.clip(fake.history_actions, 0, 3), axis=0)
+        tgt = ec.row_lookup(params["item_emb"], fake.item_ids,
+                            vocab=cfg.n_items)
+        hist_emb = ec.seq_lookup(params["item_emb"], fake.history_ids,
+                                 vocab=cfg.n_items)
+        act = ec.seq_lookup(params["act_emb"], fake.history_actions, vocab=4)
         from repro.core.sequence import encode_per_impression
         seq_cfg = ROOSequenceConfig(_hstu_cfg(cfg), cfg.hist_len, cfg.m_targets)
         seq_feat = encode_per_impression(params["seq"], seq_cfg, hist_emb + act,
@@ -223,6 +221,20 @@ def lsr_logits_impression(params: Dict, cfg: LSRConfig, batch: ROOBatch) -> jnp.
     x = jnp.concatenate([user, item], axis=-1)
     x = dcnv2_apply(params["cross"], x)
     return mlp_apply(params["top_mlp"], x)
+
+
+def lsr_table_ids(cfg: LSRConfig, batch: ROOBatch) -> Dict[str, jnp.ndarray]:
+    """Every id the ROO forward looks up, per embedding table — the
+    declaration ``embeddings.sparse.make_sparse_value_and_grad`` gathers
+    (and dedups) before differentiating w.r.t. the touched rows only."""
+    ids = {
+        "item_emb": jnp.concatenate([batch.history_ids.reshape(-1),
+                                     batch.item_ids.reshape(-1)]),
+        "act_emb": batch.history_actions.reshape(-1),
+    }
+    if batch.ro_sparse is not None:
+        ids["user_cat_emb"] = batch.ro_sparse["user_ids"].values.reshape(-1)
+    return ids
 
 
 def lsr_loss(params: Dict, cfg: LSRConfig, batch: ROOBatch,

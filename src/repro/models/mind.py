@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.core.fanout import fanout
 from repro.core.roo_batch import ROOBatch
+from repro.embeddings import collection as ec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,8 +57,8 @@ def interest_capsules(params: Dict, cfg: MINDConfig, hist_ids: jnp.ndarray,
     """
     b, t = hist_ids.shape
     d, kk = cfg.embed_dim, cfg.n_interests
-    e = jnp.take(params["item_emb"], jnp.clip(hist_ids, 0, cfg.n_items - 1),
-                 axis=0)                                     # (B,T,d)
+    e = ec.seq_lookup(params["item_emb"], hist_ids,
+                      vocab=cfg.n_items)                     # (B,T,d)
     eh = e @ params["S"]                                     # low-level caps
     valid = (jnp.arange(t)[None] < lengths[:, None])
     # deterministic init of routing logits (hash of position) — paper uses
@@ -80,10 +81,16 @@ def score_candidates_roo(params: Dict, cfg: MINDConfig,
     caps = interest_capsules(params, cfg, batch.history_ids[:, :cfg.hist_len],
                              jnp.minimum(batch.history_lengths, cfg.hist_len))
     caps_nro = fanout(caps, batch.segment_ids)               # (B_NRO,K,d)
-    tgt = jnp.take(params["item_emb"],
-                   jnp.clip(batch.item_ids, 0, cfg.n_items - 1), axis=0)
+    tgt = ec.row_lookup(params["item_emb"], batch.item_ids, vocab=cfg.n_items)
     scores = jnp.einsum("bkd,bd->bk", caps_nro, tgt)         # (B_NRO,K)
     return jnp.max(scores, axis=-1)                          # serving rule
+
+
+def mind_table_ids(cfg: MINDConfig, batch: ROOBatch) -> Dict:
+    """Per-table id declaration for sparse-gradient training."""
+    return {"item_emb": jnp.concatenate([
+        batch.history_ids[:, :cfg.hist_len].reshape(-1),
+        batch.item_ids.reshape(-1)])}
 
 
 def mind_loss(params: Dict, cfg: MINDConfig, batch: ROOBatch,
@@ -91,8 +98,7 @@ def mind_loss(params: Dict, cfg: MINDConfig, batch: ROOBatch,
     """Sampled-softmax over in-batch items with label-aware attention."""
     caps = interest_capsules(params, cfg, batch.history_ids[:, :cfg.hist_len],
                              jnp.minimum(batch.history_lengths, cfg.hist_len))
-    tgt = jnp.take(params["item_emb"],
-                   jnp.clip(batch.item_ids, 0, cfg.n_items - 1), axis=0)
+    tgt = ec.row_lookup(params["item_emb"], batch.item_ids, vocab=cfg.n_items)
     caps_nro = fanout(caps, batch.segment_ids)               # (B_NRO,K,d)
     att = jax.nn.softmax(
         cfg.pow_p * jnp.einsum("bkd,bd->bk", caps_nro, tgt), axis=-1)

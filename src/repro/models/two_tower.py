@@ -21,7 +21,7 @@ from repro.core.fanout import fanout
 from repro.core.hstu import HSTUConfig, hstu_apply, hstu_init
 from repro.core.masks import causal_spec
 from repro.core.roo_batch import ROOBatch
-from repro.embeddings.bag import bag_lookup, bag_lookup_dense
+from repro.embeddings import collection as ec
 from repro.models.mlp import mlp_apply, mlp_init
 
 
@@ -64,12 +64,10 @@ def user_tower(params: Dict, cfg: TwoTowerConfig, batch: ROOBatch) -> jnp.ndarra
     """RO-only computation -> (B_RO, d_user)."""
     d = cfg.embed_dim
     if cfg.user_tower_mode == "hstu":
-        hist = bag_lookup_dense(params["item_emb"], batch.history_ids,
-                                batch.history_lengths, pooling="sum")
-        hist_emb = jnp.take(params["item_emb"],
-                            jnp.clip(batch.history_ids, 0, cfg.n_items - 1), axis=0)
-        act_emb = jnp.take(params["act_emb"],
-                           jnp.clip(batch.history_actions, 0, 3), axis=0)
+        hist_emb = ec.seq_lookup(params["item_emb"], batch.history_ids,
+                                 vocab=cfg.n_items)
+        act_emb = ec.seq_lookup(params["act_emb"], batch.history_actions,
+                                vocab=4)
         seq = hist_emb + act_emb
         spec = causal_spec(batch.history_lengths, cfg.hist_len)
         enc = hstu_apply(params["hstu"], cfg.hstu, seq, spec)
@@ -78,10 +76,11 @@ def user_tower(params: Dict, cfg: TwoTowerConfig, batch: ROOBatch) -> jnp.ndarra
         pooled = jnp.sum(enc * valid[..., None], 1) / jnp.maximum(
             batch.history_lengths, 1).astype(enc.dtype)[:, None]
     else:
-        pooled = bag_lookup_dense(params["item_emb"], batch.history_ids,
-                                  batch.history_lengths, pooling="mean")
-    cats = bag_lookup(params["user_cat_emb"], batch.ro_sparse["user_ids"],
-                      pooling="mean") if batch.ro_sparse is not None else \
+        pooled = ec.bag_lookup_dense(params["item_emb"], batch.history_ids,
+                                     batch.history_lengths, pooling="mean",
+                                     vocab=cfg.n_items)
+    cats = ec.bag_lookup(params["user_cat_emb"], batch.ro_sparse["user_ids"],
+                         pooling="mean") if batch.ro_sparse is not None else \
         jnp.zeros((batch.b_ro, d))
     x = jnp.concatenate([batch.ro_dense, pooled, cats], axis=-1)
     u = mlp_apply(params["user_mlp"], x)
@@ -90,10 +89,22 @@ def user_tower(params: Dict, cfg: TwoTowerConfig, batch: ROOBatch) -> jnp.ndarra
 
 def item_tower(params: Dict, cfg: TwoTowerConfig, item_ids: jnp.ndarray,
                item_dense: jnp.ndarray) -> jnp.ndarray:
-    emb = jnp.take(params["item_emb"], jnp.clip(item_ids, 0, cfg.n_items - 1), axis=0)
+    emb = ec.row_lookup(params["item_emb"], item_ids, vocab=cfg.n_items)
     x = jnp.concatenate([item_dense, emb], axis=-1)
     v = mlp_apply(params["item_mlp"], x)
     return v / (jnp.linalg.norm(v, axis=-1, keepdims=True) + 1e-6)
+
+
+def two_tower_table_ids(cfg: TwoTowerConfig, batch: ROOBatch) -> Dict:
+    """Per-table id declaration for sparse-gradient training
+    (``embeddings.sparse.make_sparse_value_and_grad``)."""
+    ids = {"item_emb": jnp.concatenate([batch.history_ids.reshape(-1),
+                                        batch.item_ids.reshape(-1)])}
+    if cfg.user_tower_mode == "hstu":
+        ids["act_emb"] = batch.history_actions.reshape(-1)
+    if batch.ro_sparse is not None:
+        ids["user_cat_emb"] = batch.ro_sparse["user_ids"].values.reshape(-1)
+    return ids
 
 
 def retrieval_loss_roo(params: Dict, cfg: TwoTowerConfig, batch: ROOBatch,

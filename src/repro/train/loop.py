@@ -26,6 +26,7 @@ from typing import Any, Callable, Dict, Iterator, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.embeddings import sparse as _sp
 from repro.train.checkpoint import CheckpointManager
 from repro.train.optim import Optimizer
 
@@ -41,12 +42,21 @@ class TrainLoopConfig:
 
 
 def make_train_step(loss_fn: Callable, opt: Optimizer,
-                    microbatches: int = 1, plan=None, state_shardings=None):
+                    microbatches: int = 1, plan=None, state_shardings=None,
+                    value_and_grad_fn: Optional[Callable] = None):
     """Returns jit'd step(state, batch) -> (state, metrics).
 
     With microbatches > 1, `batch` must be a pytree whose leaves have a
     leading microbatch axis; grads are accumulated (comm/compute overlap:
     the all-reduce happens once per step, not per microbatch).
+
+    ``value_and_grad_fn(params, batch, rng) -> (loss, grads)`` replaces the
+    default ``jax.value_and_grad(loss_fn)`` — the sparse-embedding path
+    (``embeddings.sparse.make_sparse_value_and_grad``) plugs in here, and
+    its ``SparseRows`` grad leaves flow through accumulation and into the
+    optimizer: the dense part rides the scan carry as before, the COO part
+    is emitted per-microbatch and stacked by the scan (a COO sum IS
+    concatenation; the optimizer's segment merge folds duplicates).
 
     With an enabled ``plan`` (distributed/sharding.py) and the matching
     ``state_shardings`` pytree (distributed/spmd.py), the step runs SPMD:
@@ -54,29 +64,46 @@ def make_train_step(loss_fn: Callable, opt: Optimizer,
     the data axes) and ``out_shardings`` pins the updated state to the same
     layout, so parameters never silently de-shard between steps.
     """
+    if value_and_grad_fn is None:
+        def value_and_grad_fn(params, b, r):
+            return jax.value_and_grad(loss_fn)(params, b, r)
+    vag = value_and_grad_fn
+
     def step(state, batch, rng):
         params = state["params"]
 
         if microbatches > 1:
+            # which grads leaves are sparse is structural (trace-time):
+            # read it off the abstract grads tree so the scan carry holds
+            # only the dense part
+            g_aval = jax.eval_shape(vag, params,
+                                    jax.tree.map(lambda x: x[0], batch),
+                                    rng)[1]
+            dense_aval, _ = _sp.split_sparse(g_aval)
+            zero = jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32),
+                                dense_aval)
+
             def micro(carry, xs):
                 mb, i = xs
                 acc, = carry
                 # distinct rng per microbatch — otherwise dropout/sampling
                 # repeat across the accumulation scan
-                l, g = jax.value_and_grad(loss_fn)(
-                    params, mb, jax.random.fold_in(rng, i))
-                return (jax.tree.map(jnp.add, acc, g),), l
-            zero = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
-            (gsum,), losses = jax.lax.scan(
+                l, g = vag(params, mb, jax.random.fold_in(rng, i))
+                dense_g, sparse_g = _sp.split_sparse(g)
+                return (jax.tree.map(jnp.add, acc, dense_g),), (l, sparse_g)
+            (gsum,), (losses, sp_stacked) = jax.lax.scan(
                 micro, (zero,), (batch, jnp.arange(microbatches)))
-            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            grads = _sp.merge_sparse(
+                jax.tree.map(lambda g: g / microbatches, gsum),
+                _sp.flatten_stacked(sp_stacked, 1.0 / microbatches))
             loss = jnp.mean(losses)
         else:
-            loss, grads = jax.value_and_grad(loss_fn)(params, batch, rng)
+            loss, grads = vag(params, batch, rng)
 
         new_params, new_opt = opt.update(grads, state["opt"], params)
-        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
-                             for g in jax.tree.leaves(grads)) + 1e-20)
+        gnorm = jnp.sqrt(sum(_sp.sq_sum(g) for g in
+                             jax.tree.leaves(grads, is_leaf=_sp.is_sparse))
+                         + 1e-20)
         # {**state, ...} carries pass-through keys (e.g. the base "rng")
         new_state = {**state, "params": new_params, "opt": new_opt,
                      "step": state["step"] + 1}
@@ -91,17 +118,27 @@ def make_train_step(loss_fn: Callable, opt: Optimizer,
 class Trainer:
     def __init__(self, loss_fn: Callable, opt: Optimizer,
                  cfg: TrainLoopConfig,
-                 init_params_fn: Callable[[], Any], *, plan=None):
+                 init_params_fn: Callable[[], Any], *, plan=None,
+                 value_and_grad_fn: Optional[Callable] = None,
+                 metrics_fn: Optional[Callable] = None):
         self.loss_fn = loss_fn
         self.opt = opt
         self.cfg = cfg
         self.init_params_fn = init_params_fn
         self.plan = plan
+        self.value_and_grad_fn = value_and_grad_fn
+        # extra metrics (e.g. NE) run OUTSIDE the train step, only at
+        # logging steps — a quality metric consumed 1-in-log_every times
+        # must not cost a second model forward on every step
+        self.metrics_fn = metrics_fn
+        self._metrics_jit = (jax.jit(metrics_fn)
+                             if metrics_fn is not None else None)
         self._spmd = plan is not None and plan.enabled
         # under a mesh the step's out_shardings need the concrete state
         # pytree, so compilation is deferred to the first run()
         self.step_fn = (None if self._spmd
-                        else make_train_step(loss_fn, opt, cfg.microbatches))
+                        else make_train_step(loss_fn, opt, cfg.microbatches,
+                                             value_and_grad_fn=value_and_grad_fn))
         self.ckpt = (CheckpointManager(cfg.ckpt_dir, cfg.keep_last)
                      if cfg.ckpt_dir else None)
         self.history: list = []
@@ -125,7 +162,8 @@ class Trainer:
             self.step_fn = make_train_step(self.loss_fn, self.opt,
                                            self.cfg.microbatches,
                                            plan=self.plan,
-                                           state_shardings=shardings)
+                                           state_shardings=shardings,
+                                           value_and_grad_fn=self.value_and_grad_fn)
         # with grad accumulation dim 0 is the scan axis — shard dim 1
         self._place_batch = spmd.make_batch_placer(
             self.plan, batch_dim=1 if self.cfg.microbatches > 1 else 0)
@@ -159,10 +197,19 @@ class Trainer:
             state, metrics = self.step_fn(state, batch,
                                           jax.random.fold_in(base_rng, step))
             if (step + 1) % self.cfg.log_every == 0:
-                loss = float(metrics["loss"])
                 rate = (step + 1 - start) / max(time.time() - t0, 1e-9)
-                self.history.append({"step": step + 1, "loss": loss,
-                                     "steps_per_s": rate})
+                row = {"step": step + 1, "loss": float(metrics["loss"]),
+                       "steps_per_s": rate}
+                row.update({k: float(v) for k, v in metrics.items()
+                            if k not in row})
+                if self._metrics_jit is not None:
+                    mb = (jax.tree.map(lambda x: x[0], batch)
+                          if self.cfg.microbatches > 1 else batch)
+                    extra = self._metrics_jit(
+                        state["params"], mb,
+                        jax.random.fold_in(base_rng, step))
+                    row.update({k: float(v) for k, v in extra.items()})
+                self.history.append(row)
             if self.ckpt is not None and (step + 1) % self.cfg.ckpt_every == 0:
                 self.ckpt.save(int(state["step"]), state, blocking=False)
                 if on_checkpoint is not None:

@@ -31,6 +31,22 @@ def normalized_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
     return ce / ce_base
 
 
+def make_ne_metrics(logits_labels_fn):
+    """Build a Trainer ``metrics_fn`` surfacing NE in the step metrics.
+
+    ``logits_labels_fn(params, batch) -> (logits, labels[, weights])``
+    extracts the primary-task head from the model; the returned callable
+    plugs into ``Trainer(metrics_fn=...)`` / ``make_train_step`` so every
+    logged history row carries the paper's quality metric alongside loss.
+    """
+    def metrics_fn(params, batch, rng):
+        out = logits_labels_fn(params, batch)
+        logits, labels = out[0], out[1]
+        weights = out[2] if len(out) > 2 else None
+        return {"ne": normalized_entropy(logits, labels, weights)}
+    return metrics_fn
+
+
 def recall_at_k(user_repr: jnp.ndarray, item_repr: jnp.ndarray,
                 positives: jnp.ndarray, k: int = 100) -> jnp.ndarray:
     """user_repr: (B, d); item_repr: (N, d); positives: (B,) item indices.

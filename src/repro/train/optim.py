@@ -4,6 +4,14 @@ Row-wise Adagrad is the production embedding optimizer (one accumulator
 scalar per table ROW instead of per element — 1/D the state, the TorchRec
 default for huge tables); Adam handles the dense parameters. ``make_mixed``
 routes by parameter path, which is exactly how DLRM deployments configure it.
+
+Row-wise Adagrad additionally takes **sparse row gradients**: a grads leaf
+may be a ``repro.embeddings.sparse.SparseRows`` (COO, from
+``make_sparse_value_and_grad``), in which case duplicates are segment-sum
+merged and only the touched rows of the accumulator and the table are read
+and written — per-row arithmetic is bit-identical to the dense apply
+(tests/test_embeddings.py asserts exact equality), untouched rows never
+move through memory.
 """
 from __future__ import annotations
 
@@ -11,6 +19,8 @@ from typing import Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.embeddings.sparse import SparseRows, is_sparse
 
 
 class Optimizer(NamedTuple):
@@ -58,14 +68,44 @@ def adam(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.999,
     return Optimizer(init, update)
 
 
+def _rowwise_sparse_apply(p, g: SparseRows, a, lr: float, eps: float):
+    """Touched-rows-only row-wise Adagrad step from a COO row gradient.
+
+    Duplicate ids are merged first (dense scatter semantics: contributions
+    add, THEN the row_sq/accumulator math runs — merging after would change
+    the accumulator), then only the |touched| rows of ``a`` and ``p`` are
+    gathered, stepped with the exact dense arithmetic, and scattered back.
+    Padding entries (id == vocab) drop out of both scatters.
+    """
+    m = g.merged()
+    ids = m.ids                                    # (N,) unique; vocab = pad
+    g32 = m.rows.astype(jnp.float32)
+    touched = ids < g.vocab
+    safe = jnp.where(touched, ids, 0)
+    row_sq = jnp.mean(g32 * g32, axis=tuple(range(1, g32.ndim)))
+    a_rows = jnp.take(a, safe) + jnp.where(touched, row_sq, 0.0)
+    scale = lr / (jnp.sqrt(a_rows) + eps)
+    step = g32 * scale.reshape((-1,) + (1,) * (g32.ndim - 1))
+    p_rows = (jnp.take(p, safe, axis=0).astype(jnp.float32)
+              - step).astype(p.dtype)
+    new_p = p.at[ids].set(p_rows, mode="drop")
+    new_a = a.at[ids].set(a_rows, mode="drop")
+    return new_p, new_a
+
+
 def rowwise_adagrad(lr: float = 0.01, eps: float = 1e-8) -> Optimizer:
-    """One accumulator per embedding row: state[p] has shape p.shape[:1]."""
+    """One accumulator per embedding row: state[p] has shape p.shape[:1].
+
+    Dense grads update every row; :class:`SparseRows` grads scatter-update
+    only the touched rows (identical per-row arithmetic)."""
     def init(params):
         return {"acc": jax.tree.map(
             lambda p: jnp.zeros(p.shape[:1], jnp.float32), params)}
 
     def update(grads, state, params):
         def upd(p, g, a):
+            if is_sparse(g):
+                return _rowwise_sparse_apply(p, g, a, lr, eps)
             g32 = g.astype(jnp.float32)
             row_sq = jnp.mean(g32 * g32, axis=tuple(range(1, g32.ndim)))
             a = a + row_sq
@@ -130,7 +170,9 @@ def make_mixed(dense_opt: Optimizer, embedding_opt: Optimizer,
 
     def update(grads, state, params):
         emb_mask = _mask(params)
-        g_leaves = jax.tree.leaves(grads)
+        # SparseRows grads are leaves here: they must stay whole and pair
+        # up positionally with their table param
+        g_leaves = jax.tree.leaves(grads, is_leaf=is_sparse)
         p_leaves = jax.tree.leaves(params)
         ge = [g for g, m in zip(g_leaves, emb_mask) if m]
         pe = [p for p, m in zip(p_leaves, emb_mask) if m]

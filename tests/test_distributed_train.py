@@ -296,6 +296,51 @@ class TestShardedCheckpoint:
                                    rtol=2e-4, atol=1e-6)
 
 
+class TestDedupComposesWithPsum:
+    """Request-level id dedup (embeddings/collection.py) must compose with
+    the row-sharded psum lookup path: unique ids go through the sharded
+    gather, duplicates expand locally, results match the replicated direct
+    gather exactly."""
+
+    def test_seq_lookup_dedup_sharded_parity(self, plan):
+        from repro.embeddings import collection as ec
+        table = jax.random.normal(jax.random.PRNGKey(0), (512, 32))
+        # duplicate-heavy ids: 8 requests x 16 slots over a 40-id alphabet
+        ids = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, 40)
+        want = jnp.take(table, ids, axis=0)
+        sh_table = jax.device_put(
+            table, jax.sharding.NamedSharding(
+                plan.mesh, jax.sharding.PartitionSpec("model", None)))
+        sh_ids = spmd.place_batch(ids, plan)
+        out = jax.jit(lambda t, i: ec.seq_lookup(
+            t, i, vocab=512, plan=plan, dedup=True))(sh_table, sh_ids)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+        # and the composed path still lowers to the psum all-reduce
+        text = (jax.jit(lambda t, i: ec.seq_lookup(
+            t, i, vocab=512, plan=plan, dedup=True))
+            .lower(sh_table, sh_ids).compile().as_text())
+        assert "all-reduce" in text
+
+    def test_lsr_loss_dedup_forced(self, plan, dist_batches):
+        from repro.embeddings.collection import set_dedup_policy
+        cfg = _lsr_cfg()
+        params = lsr_init(jax.random.PRNGKey(0), cfg)
+        batch = dist_batches[0]
+        try:
+            set_dedup_policy("never")
+            want = float(lsr_loss(params, cfg, batch))
+            set_dedup_policy("always")
+            sh_params = jax.device_put(params,
+                                       spmd.state_shardings(params, plan))
+            sh_batch = spmd.place_batch(batch, plan)
+            got = float(jax.jit(lambda p, b: lsr_loss(p, cfg, b, plan=plan))(
+                sh_params, sh_batch))
+        finally:
+            set_dedup_policy(None)
+        np.testing.assert_allclose(got, want, rtol=2e-5)
+
+
 class TestShardedHLO:
     def test_ro_tower_hlo_has_model_allreduce(self, plan, dist_batches):
         """The RO (user) tower's compiled HLO must contain the all-reduce

@@ -57,22 +57,62 @@ class TestHSTUAttention:
 
 
 class TestEmbeddingBag:
+    @pytest.mark.parametrize("pooling", ["sum", "mean", "max"])
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
     @pytest.mark.parametrize("v,d,b,l", [(100, 8, 4, 3), (1000, 64, 16, 10),
                                          (5000, 128, 32, 20)])
-    def test_matches_oracle(self, v, d, b, l, dtype):
+    def test_matches_oracle(self, v, d, b, l, dtype, pooling):
         rng = jax.random.PRNGKey(0)
         tbl = jax.random.normal(rng, (v, d), dtype)
         ids = jax.random.randint(jax.random.fold_in(rng, 1), (b, l), 0, v)
         lens = jax.random.randint(jax.random.fold_in(rng, 2), (b,), 0, l + 1)
-        out = embedding_bag(tbl, ids, lens)
-        want = ref.embedding_bag_ref(tbl, ids, lens)
+        out = embedding_bag(tbl, ids, lens, pooling,
+                            backend="pallas-interpret")
+        want = ref.embedding_bag_ref(tbl, ids, lens, pooling)
         # bf16: kernel accumulates in-place in bf16; oracle reduces in a
         # different order — tolerance is 2 ulps of the running sum
         tol = 5e-2 if dtype == jnp.bfloat16 else 1e-6
         np.testing.assert_allclose(np.asarray(out, np.float32),
                                    np.asarray(want, np.float32),
                                    atol=tol, rtol=tol)
+
+    @pytest.mark.parametrize("pooling", ["sum", "mean", "max"])
+    def test_table_grad_matches_oracle(self, pooling):
+        """The custom_vjp backward (COO rows -> dense cotangent) must agree
+        with autodiff through the jnp oracle."""
+        rng = jax.random.PRNGKey(3)
+        v, d, b, l = 200, 16, 8, 6
+        tbl = jax.random.normal(rng, (v, d))
+        ids = jax.random.randint(jax.random.fold_in(rng, 1), (b, l), 0, v)
+        lens = jax.random.randint(jax.random.fold_in(rng, 2), (b,), 0, l + 1)
+        w = jax.random.normal(jax.random.fold_in(rng, 3), (b, d))
+
+        def loss(fn):
+            return lambda t: jnp.sum(w * fn(t))
+        g_kernel = jax.grad(loss(lambda t: embedding_bag(
+            t, ids, lens, pooling, backend="pallas-interpret")))(tbl)
+        g_oracle = jax.grad(loss(lambda t: ref.embedding_bag_ref(
+            t, ids, lens, pooling)))(tbl)
+        np.testing.assert_allclose(np.asarray(g_kernel),
+                                   np.asarray(g_oracle), atol=1e-5)
+
+    def test_backend_resolution(self, monkeypatch):
+        """Selection follows the dispatch ladder: auto==jnp off-TPU, env
+        override honored, explicit arg beats env."""
+        from repro.kernels import dispatch
+        assert dispatch.resolve_emb_backend() == "jnp"   # CPU auto
+        monkeypatch.setenv(dispatch.EMB_ENV_VAR, "pallas-interpret")
+        assert dispatch.resolve_emb_backend() == "pallas-interpret"
+        assert dispatch.resolve_emb_backend("jnp") == "jnp"
+        with dispatch.use_emb_backend("jnp"):            # scoped beats env
+            assert dispatch.resolve_emb_backend() == "jnp"
+        dispatch.set_default_emb_backend("jnp")          # default beats env
+        try:
+            assert dispatch.resolve_emb_backend() == "jnp"
+        finally:
+            dispatch.set_default_emb_backend(None)
+        with pytest.raises(ValueError):
+            dispatch.resolve_emb_backend("cuda")
 
     @settings(max_examples=20, deadline=None)
     @given(st.integers(1, 12), st.integers(1, 9), st.data())
@@ -82,7 +122,8 @@ class TestEmbeddingBag:
         tbl = jnp.asarray(rng.normal(size=(v, d)).astype(np.float32))
         ids = jnp.asarray(rng.randint(0, v, size=(b, l)).astype(np.int32))
         lens = jnp.asarray(rng.randint(0, l + 1, size=(b,)).astype(np.int32))
-        out = np.asarray(embedding_bag(tbl, ids, lens))
+        out = np.asarray(embedding_bag(tbl, ids, lens,
+                                       backend="pallas-interpret"))
         # independent numpy oracle
         want = np.zeros((b, d), np.float32)
         for i in range(b):

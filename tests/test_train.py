@@ -76,6 +76,33 @@ class TestMetrics:
         logits = (labels * 2 - 1) * 3.0
         assert float(auc(logits, labels)) > 0.95
 
+    def test_ne_surfaced_in_trainer_history(self):
+        """make_ne_metrics plugs into Trainer(metrics_fn=...) and every
+        logged history row carries a finite, shrinking NE."""
+        from repro.train.metrics import make_ne_metrics
+        rng = jax.random.PRNGKey(0)
+        x = jax.random.normal(rng, (256, 8))
+        w_true = jax.random.normal(jax.random.fold_in(rng, 1), (8,))
+        y = (x @ w_true > 0).astype(jnp.float32)
+        batch = {"x": x, "y": y}
+
+        def logits_fn(p, b):
+            return b["x"] @ p["w"], b["y"]
+
+        def loss(p, b, r):
+            logits = logits_fn(p, b)[0]
+            return jnp.mean(jnp.maximum(logits, 0) - logits * b["y"]
+                            + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+        trainer = Trainer(loss, sgd(0.5),
+                          TrainLoopConfig(total_steps=30, log_every=5),
+                          lambda: {"w": jnp.zeros((8,))},
+                          metrics_fn=make_ne_metrics(logits_fn))
+        trainer.run(lambda s: iter(lambda: batch, None), rng)
+        nes = [row["ne"] for row in trainer.history]
+        assert all(np.isfinite(nes))
+        assert nes[-1] < nes[0] < 1.05       # learning shows up in NE
+
 
 class TestCheckpoint:
     def test_atomic_save_restore(self, tmp_path):
