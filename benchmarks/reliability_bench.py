@@ -1,0 +1,163 @@
+"""Reliability benchmark: what graceful degradation costs, and how fast
+recovery is. All rows measure REAL artifacts (shards on disk, running
+loader threads, committed checkpoints):
+
+  reliability_crc_overhead  — shard encode+decode with per-block CRC32
+                              (schema v2) vs without (v1 frame): the
+                              steady-state integrity tax on the hot path.
+  reliability_degraded_read — loader batches/s clean vs under injected
+                              transient read faults (retry + backoff
+                              engaged): the degraded-mode read overhead.
+  reliability_stall_recovery— wall-clock cost of one producer stall:
+                              watchdog timeout + producer respawn vs the
+                              clean run of the same stream.
+  reliability_ckpt_verify   — digest verification + verified restore time
+                              for a committed checkpoint.
+
+These rows are informational (not in the perf-gate baseline): compare.py
+ignores rows absent from the baseline, so chaos costs never gate CI.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def _build(tmp: str, n_requests: int):
+    from repro.data.events import EventSimulator, EventStreamConfig
+    from repro.pipeline import WatermarkJoiner, write_samples
+    cfg = EventStreamConfig(n_requests=n_requests, product="product_b",
+                            hist_init_max=60, seed=0)
+    samples = WatermarkJoiner().join(EventSimulator(cfg).stream())
+    write_samples(tmp, samples, requests_per_shard=64)
+    return samples
+
+
+def _crc_overhead(samples) -> None:
+    from repro.data.storage import decode_roo_shard, encode_roo_shard
+
+    def roundtrip(crc: bool) -> float:
+        best = float("inf")
+        for _ in range(5):
+            t0 = time.perf_counter()
+            decode_roo_shard(encode_roo_shard(samples, crc=crc))
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e6
+
+    on, off = roundtrip(True), roundtrip(False)
+    emit("reliability_crc_overhead", on,
+         f"crc_on_us={on:.0f};crc_off_us={off:.0f};"
+         f"overhead_pct={(on / max(off, 1e-9) - 1) * 100:.1f}")
+
+
+def _drain(loader) -> int:
+    n = 0
+    with loader:
+        for _ in loader.batches():
+            n += 1
+    return n
+
+
+def _degraded_read(shard_dir: str) -> None:
+    from repro.data.batcher import BatcherConfig
+    from repro.pipeline import PrefetchLoader, ShardDataset
+    from repro.reliability import FaultPlan, FaultSpec, use_plan
+
+    bcfg = BatcherConfig(b_ro=32, b_nro=192, hist_len=64)
+
+    def run(plan) -> float:
+        best = 0.0
+        for _ in range(3):
+            with use_plan(plan):
+                loader = PrefetchLoader(ShardDataset(shard_dir, bcfg),
+                                        prefetch=True, epochs=1,
+                                        max_retries=8,
+                                        retry_backoff_s=0.001)
+                t0 = time.perf_counter()
+                n = _drain(loader)
+                best = max(best, n / (time.perf_counter() - t0))
+        return best
+
+    clean = run(None)
+    storm = FaultPlan([FaultSpec("prefetch.io", "error", p=0.2)], seed=1)
+    degraded = run(storm)
+    emit("reliability_degraded_read", 1e6 / max(degraded, 1e-9),
+         f"clean_batches_per_s={clean:.1f};"
+         f"degraded_batches_per_s={degraded:.1f};"
+         f"overhead_pct={(clean / max(degraded, 1e-9) - 1) * 100:.1f};"
+         f"fault=prefetch.io:error@0.2")
+
+
+def _stall_recovery(shard_dir: str) -> None:
+    from repro.data.batcher import BatcherConfig
+    from repro.pipeline import PrefetchLoader, ShardDataset
+    from repro.reliability import FaultPlan, FaultSpec, use_plan
+
+    bcfg = BatcherConfig(b_ro=32, b_nro=192, hist_len=64)
+    stall_timeout_s = 0.2
+
+    def run(plan) -> float:
+        with use_plan(plan):
+            loader = PrefetchLoader(ShardDataset(shard_dir, bcfg),
+                                    prefetch=True, epochs=1,
+                                    stall_timeout_s=stall_timeout_s)
+            t0 = time.perf_counter()
+            _drain(loader)
+            dt = time.perf_counter() - t0
+        return dt
+
+    clean = min(run(None) for _ in range(3))
+    stalled = run(FaultPlan([FaultSpec("prefetch.stall", "stall",
+                                       max_fires=1)]))
+    recovery = max(stalled - clean, 0.0)
+    emit("reliability_stall_recovery", recovery * 1e6,
+         f"clean_s={clean:.3f};stalled_s={stalled:.3f};"
+         f"recovery_s={recovery:.3f};"
+         f"stall_timeout_s={stall_timeout_s};watchdog_restarts=1")
+
+
+def _ckpt_verify(tmp: str) -> None:
+    from repro.train.checkpoint import CheckpointManager
+    state = {"w": np.random.RandomState(0).normal(
+        size=(512, 64)).astype(np.float32),
+        "step": np.asarray(7, np.int32)}
+    mgr = CheckpointManager(os.path.join(tmp, "ckpt"), keep_last=2)
+    mgr.save(7, state)
+
+    def best(fn) -> float:
+        t = float("inf")
+        for _ in range(5):
+            t0 = time.perf_counter()
+            fn()
+            t = min(t, time.perf_counter() - t0)
+        return t * 1e6
+
+    verify_us = best(lambda: mgr.verify(7))
+    restore_us = best(mgr.restore)
+    emit("reliability_ckpt_verify", verify_us,
+         f"verify_us={verify_us:.0f};verified_restore_us={restore_us:.0f};"
+         f"state_bytes={state['w'].nbytes}")
+
+
+def run(smoke: bool = False) -> None:
+    n_requests = 150 if smoke else 400
+    tmp = tempfile.mkdtemp(prefix="roo_reliability_bench_")
+    try:
+        shard_dir = os.path.join(tmp, "shards")
+        samples = _build(shard_dir, n_requests)
+        _crc_overhead(samples)
+        _degraded_read(shard_dir)
+        _stall_recovery(shard_dir)
+        _ckpt_verify(tmp)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in __import__("sys").argv[1:])

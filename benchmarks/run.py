@@ -17,6 +17,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
   embedding_*              — dedup lookup + sparse-grad + sparse-update vs
                              the dense path on a zipf workload
                              (docs/EMBEDDINGS.md)
+  reliability_*            — graceful-degradation overhead + recovery time
+                             (CRC tax, degraded reads, stall watchdog,
+                             checkpoint verify — docs/RELIABILITY.md);
+                             informational, never gated
 
 ``--smoke`` runs the kernel, embedding, serving, and pipeline benchmarks at
 reduced scale — the tier-1 perf gate wired into scripts/check.sh. ``--json
@@ -37,11 +41,12 @@ def main() -> None:
     print("name,us_per_call,derived")
     try:
         from benchmarks import (embedding_bench, hstu_kernel, pipeline_bench,
-                                serving)
+                                reliability_bench, serving)
         hstu_kernel.run(smoke=smoke)
         embedding_bench.run(smoke=smoke)
         serving.run(smoke=smoke)
         pipeline_bench.run(smoke=smoke)
+        reliability_bench.run(smoke=smoke)
         if smoke:
             return
         from benchmarks import (join_quality, retrieval_flops, roofline,

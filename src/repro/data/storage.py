@@ -13,9 +13,18 @@ Two layers live here:
        magic "ROOSHRD1" | u32 header_len | header JSON | column blocks
 
    where each column block is ``u32 name_len | name | u8 dtype | u8 flags |
-   u64 raw_len | u64 stored_len | payload`` (flags bit 0 = zlib). The header
+   u64 raw_len | u64 stored_len | u32 crc32 | payload`` (flags bit 0 =
+   zlib; the ``crc32`` field — over the stored payload — is new in schema
+   v2 and absent from v1 blocks, which remain readable: the header's
+   ``schema_version`` tells the reader which frame it is). The header
    carries ``schema`` + ``schema_version`` so readers can reject formats
    they don't understand, plus the label-key order and dedup pool size.
+
+   **Corruption detection**: v2 readers verify every block's CRC before
+   touching the payload and raise :class:`ShardCorruptionError` (also
+   raised for truncated frames and undecompressible payloads), which the
+   pipeline layer (pipeline/shards.py) turns into per-shard quarantine
+   instead of a training crash.
 
    RO payloads (ro_dense, ro_idlist, history) are stored **deduplicated**:
    a pool of unique payloads plus one ``ro_ref`` int per request. Within a
@@ -37,11 +46,16 @@ import numpy as np
 
 from repro.core.joiner import ImpressionSample, ROOSample
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2      # v2 = per-block CRC32; v1 frames remain readable
 _MAGIC = b"ROOSHRD1"
 _DTYPES = {0: np.int32, 1: np.int64, 2: np.float32}
 _DTYPE_CODES = {np.dtype(np.int32): 0, np.dtype(np.int64): 1,
                 np.dtype(np.float32): 2}
+
+
+class ShardCorruptionError(ValueError):
+    """A shard blob failed integrity checks (CRC mismatch, truncated frame,
+    undecompressible payload). Lenient readers quarantine; strict raise."""
 
 
 def _col_bytes(arrays: Sequence[np.ndarray], compress: bool) -> int:
@@ -131,7 +145,7 @@ def sample_volume_increase(imp_samples: List[ImpressionSample],
 # ---------------------------------------------------------------------------
 
 def _write_block(parts: List[bytes], name: str, arr: np.ndarray,
-                 compress: bool) -> None:
+                 compress: bool, crc: bool = True) -> None:
     arr = np.ascontiguousarray(arr)
     code = _DTYPE_CODES[arr.dtype]
     raw = arr.tobytes()
@@ -145,26 +159,46 @@ def _write_block(parts: List[bytes], name: str, arr: np.ndarray,
     parts.append(struct.pack("<I", len(nm)))
     parts.append(nm)
     parts.append(struct.pack("<BBQQ", code, flags, len(raw), len(payload)))
+    if crc:
+        parts.append(struct.pack("<I", zlib.crc32(payload)))
     parts.append(payload)
 
 
-def _read_blocks(blob: bytes, offset: int) -> Dict[str, np.ndarray]:
+def _read_blocks(blob: bytes, offset: int,
+                 crc: bool = True) -> Dict[str, np.ndarray]:
     cols: Dict[str, np.ndarray] = {}
     n = len(blob)
-    while offset < n:
-        (nm_len,) = struct.unpack_from("<I", blob, offset)
-        offset += 4
-        name = blob[offset:offset + nm_len].decode("utf-8")
-        offset += nm_len
-        code, flags, raw_len, stored_len = struct.unpack_from(
-            "<BBQQ", blob, offset)
-        offset += struct.calcsize("<BBQQ")
-        payload = blob[offset:offset + stored_len]
-        offset += stored_len
-        raw = zlib.decompress(payload) if flags & 1 else payload
-        if len(raw) != raw_len:
-            raise ValueError(f"shard column {name!r}: raw length mismatch")
-        cols[name] = np.frombuffer(raw, dtype=_DTYPES[code]).copy()
+    try:
+        while offset < n:
+            (nm_len,) = struct.unpack_from("<I", blob, offset)
+            offset += 4
+            name = blob[offset:offset + nm_len].decode("utf-8")
+            offset += nm_len
+            code, flags, raw_len, stored_len = struct.unpack_from(
+                "<BBQQ", blob, offset)
+            offset += struct.calcsize("<BBQQ")
+            want_crc = None
+            if crc:
+                (want_crc,) = struct.unpack_from("<I", blob, offset)
+                offset += 4
+            payload = blob[offset:offset + stored_len]
+            offset += stored_len
+            if len(payload) != stored_len:
+                raise ShardCorruptionError(
+                    f"shard column {name!r}: truncated payload")
+            if want_crc is not None and zlib.crc32(payload) != want_crc:
+                raise ShardCorruptionError(
+                    f"shard column {name!r}: CRC32 mismatch (stored "
+                    f"{want_crc:#010x}, computed {zlib.crc32(payload):#010x})")
+            raw = zlib.decompress(payload) if flags & 1 else payload
+            if len(raw) != raw_len:
+                raise ShardCorruptionError(
+                    f"shard column {name!r}: raw length mismatch")
+            cols[name] = np.frombuffer(raw, dtype=_DTYPES[code]).copy()
+    except (struct.error, UnicodeDecodeError, zlib.error, KeyError) as e:
+        # truncated frame / garbage name / undecompressible payload / bad
+        # dtype code — all shapes a bit-flip takes in a v1 (no-CRC) block
+        raise ShardCorruptionError(f"shard frame unreadable: {e}") from e
     return cols
 
 
@@ -176,9 +210,12 @@ def _frame(header: Dict, parts: List[bytes]) -> bytes:
 def peek_shard_header(blob: bytes) -> Dict:
     """Parse just the header JSON (schema checks, manifest stats)."""
     if blob[:8] != _MAGIC:
-        raise ValueError("not a ROO shard (bad magic)")
-    (hdr_len,) = struct.unpack_from("<I", blob, 8)
-    return json.loads(blob[12:12 + hdr_len].decode("utf-8"))
+        raise ShardCorruptionError("not a ROO shard (bad magic)")
+    try:
+        (hdr_len,) = struct.unpack_from("<I", blob, 8)
+        return json.loads(blob[12:12 + hdr_len].decode("utf-8"))
+    except (struct.error, UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise ShardCorruptionError(f"shard header unreadable: {e}") from e
 
 
 def _decode_body(blob: bytes) -> Tuple[Dict, Dict[str, np.ndarray]]:
@@ -188,7 +225,9 @@ def _decode_body(blob: bytes) -> Tuple[Dict, Dict[str, np.ndarray]]:
         raise ValueError(
             f"shard schema_version {header['schema_version']} is newer than "
             f"supported {SCHEMA_VERSION}")
-    return header, _read_blocks(blob, 12 + hdr_len)
+    # v1 blocks carry no CRC field; v2+ blocks are verified before use
+    has_crc = header.get("schema_version", 0) >= 2
+    return header, _read_blocks(blob, 12 + hdr_len, crc=has_crc)
 
 
 def _ragged(values_by_row: Sequence[np.ndarray], dtype) -> Tuple[np.ndarray,
@@ -243,8 +282,9 @@ class _Pool:
 
 
 def encode_roo_shard(samples: Sequence[ROOSample], compress: bool = True,
-                     label_keys: Optional[Sequence[str]] = None) -> bytes:
-    """Serialize ROO samples into one columnar shard blob (schema v1).
+                     label_keys: Optional[Sequence[str]] = None,
+                     crc: bool = True) -> bytes:
+    """Serialize ROO samples into one columnar shard blob (schema v2).
 
     RO payloads are pooled **per component** (ro_dense / ro_idlist /
     history): identical rows are stored once, each request keeps int refs.
@@ -252,6 +292,9 @@ def encode_roo_shard(samples: Sequence[ROOSample], compress: bool = True,
     ro_dense is stable and their history only changes on engagement, so
     consecutive requests share pool entries even when another component
     (e.g. a fast-moving id-list) differs.
+
+    ``crc=False`` writes the legacy v1 frame (no per-block CRC32) — kept so
+    the v1-compatibility path stays testable.
     """
     if label_keys is None:
         label_keys = _infer_label_keys(
@@ -281,20 +324,17 @@ def encode_roo_shard(samples: Sequence[ROOSample], compress: bool = True,
             row += 1
 
     parts: List[bytes] = []
-    _write_block(parts, "request_id",
-                 np.asarray([s.request_id for s in samples], np.int64),
-                 compress)
-    _write_block(parts, "user_id",
-                 np.asarray([s.user_id for s in samples], np.int64), compress)
-    _write_block(parts, "num_impressions",
-                 np.asarray([s.num_impressions for s in samples], np.int32),
-                 compress)
-    _write_block(parts, "ro_dense_ref",
-                 np.asarray(dense_pool.refs, np.int32), compress)
-    _write_block(parts, "ro_idlist_ref",
-                 np.asarray(idlist_pool.refs, np.int32), compress)
-    _write_block(parts, "history_ref",
-                 np.asarray(hist_pool.refs, np.int32), compress)
+
+    def wb(name: str, arr: np.ndarray) -> None:
+        _write_block(parts, name, arr, compress, crc=crc)
+
+    wb("request_id", np.asarray([s.request_id for s in samples], np.int64))
+    wb("user_id", np.asarray([s.user_id for s in samples], np.int64))
+    wb("num_impressions",
+       np.asarray([s.num_impressions for s in samples], np.int32))
+    wb("ro_dense_ref", np.asarray(dense_pool.refs, np.int32))
+    wb("ro_idlist_ref", np.asarray(idlist_pool.refs, np.int32))
+    wb("history_ref", np.asarray(hist_pool.refs, np.int32))
     for name, rows, dtype in (
             ("pool_ro_dense", dense_pool.column(0), np.float32),
             ("pool_ro_idlist", idlist_pool.column(0), np.int64),
@@ -303,16 +343,16 @@ def encode_roo_shard(samples: Sequence[ROOSample], compress: bool = True,
             ("item_dense", item_dense_rows, np.float32),
             ("item_idlist", item_idlist_rows, np.int64)):
         vals, lens = _ragged(rows, dtype)
-        _write_block(parts, name + "_vals", vals, compress)
-        _write_block(parts, name + "_lens", lens, compress)
-    _write_block(parts, "item_ids", np.asarray(item_ids, np.int64), compress)
-    _write_block(parts, "labels", labels.ravel(), compress)
+        wb(name + "_vals", vals)
+        wb(name + "_lens", lens)
+    wb("item_ids", np.asarray(item_ids, np.int64))
+    wb("labels", labels.ravel())
 
     pool_sizes = {"ro_dense": len(dense_pool.rows),
                   "ro_idlist": len(idlist_pool.rows),
                   "history": len(hist_pool.rows)}
     header = {
-        "schema": "roo", "schema_version": SCHEMA_VERSION,
+        "schema": "roo", "schema_version": SCHEMA_VERSION if crc else 1,
         "n_requests": len(samples), "n_impressions": total_imp,
         "pool_sizes": pool_sizes,
         "ro_pool_size": sum(pool_sizes.values()),
@@ -366,8 +406,8 @@ def decode_roo_shard(blob: bytes) -> List[ROOSample]:
 
 def encode_impression_shard(samples: Sequence[ImpressionSample],
                             compress: bool = True,
-                            label_keys: Optional[Sequence[str]] = None
-                            ) -> bytes:
+                            label_keys: Optional[Sequence[str]] = None,
+                            crc: bool = True) -> bytes:
     """Impression-level (Table 1) shard: RO features duplicated per row.
 
     This is the established-practice baseline the pipeline benchmark
@@ -384,13 +424,13 @@ def encode_impression_shard(samples: Sequence[ImpressionSample],
             labels[i, k] = float(s.labels.get(key, 0.0))
 
     parts: List[bytes] = []
-    _write_block(parts, "request_id",
-                 np.asarray([s.request_id for s in samples], np.int64),
-                 compress)
-    _write_block(parts, "user_id",
-                 np.asarray([s.user_id for s in samples], np.int64), compress)
-    _write_block(parts, "item_id",
-                 np.asarray([s.item_id for s in samples], np.int64), compress)
+
+    def wb(name: str, arr: np.ndarray) -> None:
+        _write_block(parts, name, arr, compress, crc=crc)
+
+    wb("request_id", np.asarray([s.request_id for s in samples], np.int64))
+    wb("user_id", np.asarray([s.user_id for s in samples], np.int64))
+    wb("item_id", np.asarray([s.item_id for s in samples], np.int64))
     for name, rows, dtype in (
             ("ro_dense", [s.ro_dense for s in samples], np.float32),
             ("ro_idlist", [np.asarray(s.ro_idlist, np.int64)
@@ -403,12 +443,13 @@ def encode_impression_shard(samples: Sequence[ImpressionSample],
             ("item_idlist", [np.asarray(s.item_idlist, np.int64)
                              for s in samples], np.int64)):
         vals, lens = _ragged(rows, dtype)
-        _write_block(parts, name + "_vals", vals, compress)
-        _write_block(parts, name + "_lens", lens, compress)
-    _write_block(parts, "labels", labels.ravel(), compress)
+        wb(name + "_vals", vals)
+        wb(name + "_lens", lens)
+    wb("labels", labels.ravel())
 
     header = {
-        "schema": "impression", "schema_version": SCHEMA_VERSION,
+        "schema": "impression",
+        "schema_version": SCHEMA_VERSION if crc else 1,
         "n_rows": n, "label_keys": list(label_keys),
         "compress": bool(compress),
     }

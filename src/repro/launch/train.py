@@ -165,6 +165,12 @@ def main() -> None:
                     help="shard directory for --data disk (reused if a "
                          "manifest already exists)")
     ap.add_argument("--requests-per-shard", type=int, default=256)
+    ap.add_argument("--strict-shards", action="store_true",
+                    help="raise on corrupt shards instead of quarantining "
+                         "them (data-validation runs)")
+    ap.add_argument("--halt-after-skips", type=int, default=0,
+                    help="halt after N consecutive non-finite training "
+                         "steps (0 = keep skipping silently)")
     ap.add_argument("--no-prefetch", action="store_true",
                     help="disable the background prefetch thread "
                          "(synchronous shard reads; benchmarking aid)")
@@ -179,6 +185,11 @@ def main() -> None:
                          "device product. roo-lsr / hstu-gr only (plan-"
                          "routed losses).")
     args = ap.parse_args()
+    from repro.reliability import faults as _faults
+    _plan = _faults.active_plan()
+    if _plan is not None:
+        # fault injection is never silent: a chaos run announces itself
+        print(f"[reliability] fault injection ACTIVE: {_plan.to_env()}")
     if args.attn_backend:
         from repro.kernels.dispatch import set_default_backend
         set_default_backend(args.attn_backend)
@@ -299,7 +310,8 @@ def main() -> None:
     opt = make_mixed(adam(1e-3), rowwise_adagrad(0.05), default_is_embedding)
     trainer = Trainer(loss_fn, opt,
                       TrainLoopConfig(total_steps=args.steps, log_every=10,
-                                      ckpt_dir=args.ckpt_dir, ckpt_every=100),
+                                      ckpt_dir=args.ckpt_dir, ckpt_every=100,
+                                      halt_after_skips=args.halt_after_skips),
                       lambda: params, plan=plan,
                       value_and_grad_fn=vag_fn, metrics_fn=metrics_fn)
     t0 = time.time()
@@ -338,9 +350,18 @@ def main() -> None:
         from repro.distributed.spmd import make_batch_sharding_fn
         source = make_data_source(args.shard_dir, batcher_cfg, cursor_dir,
                                   prefetch=not args.no_prefetch,
-                                  sharding=make_batch_sharding_fn(plan))
-        state = trainer.run(source.batch_iter_fn, rng,
-                            on_checkpoint=source.on_checkpoint)
+                                  sharding=make_batch_sharding_fn(plan),
+                                  strict=args.strict_shards)
+        with source:                       # join producer threads on exit
+            state = trainer.run(source.batch_iter_fn, rng,
+                                on_checkpoint=source.on_checkpoint)
+        ds_stats = source.loader.dataset.stats
+        if ds_stats.shards_quarantined:
+            print(f"[reliability] {ds_stats.shards_quarantined} corrupt "
+                  f"shard(s) quarantined: {ds_stats.quarantined_files}")
+        if trainer.skipped_steps:
+            print(f"[reliability] {trainer.skipped_steps} non-finite "
+                  f"step(s) skipped by the guard")
     else:
         from repro.core.joiner import RequestLevelJoiner
         from repro.data.batcher import ROOBatcher

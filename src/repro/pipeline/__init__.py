@@ -9,9 +9,11 @@ Stages (docs/PIPELINE.md has the full architecture):
     -> PrefetchLoader           (pipeline/prefetch.py) background decode+pack
     -> Trainer.run              (pipeline/resume.py)   (shard, offset) cursor
 """
+from repro.data.storage import ShardCorruptionError
 from repro.pipeline.joiner import (JoinStats, OnlineJoinConfig,
                                    WatermarkJoiner)
-from repro.pipeline.prefetch import Cursor, PrefetchLoader, ShardDataset
+from repro.pipeline.prefetch import (Cursor, DatasetStats, LoaderStats,
+                                     PrefetchLoader, ShardDataset)
 from repro.pipeline.resume import (CursorStore, PipelineDataSource,
                                    make_data_source)
 from repro.pipeline.shards import (ShardInfo, ShardManifest, ShardWriter,
@@ -20,7 +22,8 @@ from repro.pipeline.shards import (ShardInfo, ShardManifest, ShardWriter,
 
 __all__ = [
     "JoinStats", "OnlineJoinConfig", "WatermarkJoiner",
-    "Cursor", "PrefetchLoader", "ShardDataset",
+    "Cursor", "DatasetStats", "LoaderStats", "PrefetchLoader",
+    "ShardCorruptionError", "ShardDataset",
     "CursorStore", "PipelineDataSource", "make_data_source",
     "ShardInfo", "ShardManifest", "ShardWriter",
     "load_manifest", "read_all", "read_shard", "write_samples",

@@ -18,19 +18,45 @@ pure function of (manifest, BatcherConfig) and a position in it is the
 consumed". Every yielded batch comes with the cursor of the *next* batch;
 checkpoint that cursor (pipeline/resume.py) and a restarted loader
 reproduces the remaining stream bit-identically, prefetch on or off.
+
+Graceful degradation (docs/RELIABILITY.md):
+
+  * **corrupt-shard quarantine** — a shard failing integrity checks
+    (``ShardCorruptionError``; per-block CRC32 since schema v2) yields zero
+    batches instead of killing training; the skip is counted in
+    ``ShardDataset.stats`` and warned once per shard. ``strict=True``
+    raises instead (debugging / data-validation runs).
+  * **bounded retry** — transient read failures (``OSError``, including
+    injected ``TransientFault``) are retried ``max_retries`` times with
+    exponential backoff + jitter before surfacing.
+  * **stall watchdog** — if the producer thread goes silent for
+    ``stall_timeout_s`` the consumer abandons it and restarts a fresh
+    producer at the exact cursor of the next undelivered batch, so a hung
+    I/O call costs one timeout, not the training job. Producer
+    generations are tagged so a zombie thread can never interleave stale
+    batches into the stream.
+  * **explicit shutdown** — ``close()`` (or ``with PrefetchLoader(...)``)
+    stops and joins every producer thread this loader started; exhausting
+    or ``close()``-ing the generator returned by ``batches()`` does the
+    same for that iteration.
 """
 from __future__ import annotations
 
 import dataclasses
 import queue
 import threading
-from typing import Iterator, List, Optional, Tuple
+import time
+import warnings
+from typing import Iterator, List, Optional, Set, Tuple
 
 import jax
+import numpy as np
 
 from repro.core.roo_batch import ROOBatch
 from repro.data.batcher import BatcherConfig, ROOBatcher
+from repro.data.storage import ShardCorruptionError
 from repro.pipeline.shards import (ShardManifest, load_manifest, read_shard)
+from repro.reliability import faults
 
 
 @dataclasses.dataclass(frozen=True, order=True)
@@ -49,14 +75,38 @@ class Cursor:
                       batch=int(obj["batch"]))
 
 
+@dataclasses.dataclass
+class DatasetStats:
+    """Corrupt-shard quarantine accounting (per ShardDataset)."""
+    shards_quarantined: int = 0
+    quarantined_files: List[str] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class LoaderStats:
+    """Degraded-mode accounting (per PrefetchLoader)."""
+    read_retries: int = 0        # transient read failures that were retried
+    read_failures: int = 0       # reads that exhausted the retry budget
+    producer_restarts: int = 0   # stall-watchdog producer replacements
+
+
 class ShardDataset:
-    """Decode + pack one shard at a time (the host-side unit of work)."""
+    """Decode + pack one shard at a time (the host-side unit of work).
+
+    ``strict=False`` (default) quarantines shards that fail integrity
+    checks — ``shard_batches`` returns no batches for them and
+    ``stats.shards_quarantined`` counts the loss; ``strict=True`` raises
+    the underlying :class:`ShardCorruptionError`.
+    """
 
     def __init__(self, shard_dir: str, batcher_cfg: BatcherConfig,
-                 manifest: Optional[ShardManifest] = None):
+                 manifest: Optional[ShardManifest] = None,
+                 strict: bool = False):
         self.shard_dir = shard_dir
         self.batcher_cfg = batcher_cfg
         self.manifest = manifest or load_manifest(shard_dir)
+        self.strict = strict
+        self.stats = DatasetStats()
         if not self.manifest.shards:
             raise ValueError(f"empty shard manifest in {shard_dir}")
 
@@ -65,11 +115,48 @@ class ShardDataset:
         return len(self.manifest.shards)
 
     def shard_batches(self, shard_index: int) -> List[ROOBatch]:
-        samples = read_shard(self.shard_dir,
-                             self.manifest.shards[shard_index])
+        info = self.manifest.shards[shard_index]
+        try:
+            samples = read_shard(self.shard_dir, info)
+        except ShardCorruptionError as e:
+            if self.strict:
+                raise
+            # quarantine: training keeps running on the surviving shards;
+            # the loss is counted, never silent
+            self.stats.shards_quarantined += 1
+            self.stats.quarantined_files.append(info.filename)
+            warnings.warn(f"quarantined corrupt shard ({e}); "
+                          f"{self.stats.shards_quarantined} quarantined "
+                          f"so far", RuntimeWarning, stacklevel=2)
+            return []
         # a fresh batcher per shard: packing must not depend on what was
         # packed before the shard, or the cursor loses determinism
         return list(ROOBatcher(self.batcher_cfg).batches(samples))
+
+
+class _Producer:
+    """One background producer generation: thread + stop flag."""
+
+    def __init__(self, gen: int, target) -> None:
+        self.gen = gen
+        self.stop = threading.Event()
+        self.thread = threading.Thread(target=target, daemon=True,
+                                       name=f"roo-prefetch-{gen}")
+
+    def close(self, q: "queue.Queue", join_timeout: float = 5.0) -> None:
+        """Stop the producer and join it, draining the queue so a thread
+        blocked on ``put`` can exit (bounded wait; a truly hung I/O call
+        leaves a daemon thread behind by design — that is what the stall
+        watchdog abandoned it for)."""
+        self.stop.set()
+        deadline = time.monotonic() + join_timeout
+        while self.thread.is_alive() and time.monotonic() < deadline:
+            try:
+                while True:
+                    q.get_nowait()
+            except queue.Empty:
+                pass
+            self.thread.join(timeout=0.05)
 
 
 class PrefetchLoader:
@@ -84,17 +171,52 @@ class PrefetchLoader:
     ``repro.distributed.spmd.make_batch_sharding_fn(plan)``). Without it
     ``device_put`` targets the default device and a mesh'd train step
     would pay a host-side reshard copy on every batch.
+
+    Reliability knobs: ``max_retries`` / ``retry_backoff_s`` /
+    ``retry_backoff_max_s`` bound the transient-read retry loop;
+    ``stall_timeout_s`` arms the producer stall watchdog (None = off);
+    ``retry_seed`` seeds the backoff jitter so chaos runs are repeatable.
     """
 
     def __init__(self, dataset: ShardDataset, prefetch: bool = True,
                  prefetch_depth: int = 3, epochs: Optional[int] = None,
-                 sharding=None):
+                 sharding=None, max_retries: int = 3,
+                 retry_backoff_s: float = 0.05,
+                 retry_backoff_max_s: float = 2.0,
+                 stall_timeout_s: Optional[float] = 300.0,
+                 retry_seed: int = 0):
         assert prefetch_depth >= 1
         self.dataset = dataset
         self.prefetch = prefetch
         self.prefetch_depth = prefetch_depth
         self.epochs = epochs          # None = cycle forever (training)
         self.sharding = sharding
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.retry_backoff_max_s = retry_backoff_max_s
+        self.stall_timeout_s = stall_timeout_s
+        self.stats = LoaderStats()
+        self._retry_rng = np.random.default_rng(retry_seed)
+        self._producers: Set[_Producer] = set()
+        self._queues = {}             # producer -> its queue (for close())
+        self._closed = False
+
+    # -- lifecycle ---------------------------------------------------------------
+    def close(self) -> None:
+        """Stop and join every producer thread this loader started. Safe to
+        call twice; also runs when the loader is used as a context manager
+        or when a ``batches()`` generator is closed/exhausted."""
+        self._closed = True
+        for prod in list(self._producers):
+            prod.close(self._queues.get(prod) or queue.Queue())
+            self._producers.discard(prod)
+            self._queues.pop(prod, None)
+
+    def __enter__(self) -> "PrefetchLoader":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def _place(self, batch: ROOBatch):
         s = self.sharding
@@ -104,8 +226,43 @@ class PrefetchLoader:
             s = s(batch)
         return jax.block_until_ready(jax.device_put(batch, s))
 
+    # -- fault-tolerant shard read ----------------------------------------------
+    def _read_with_retry(self, shard_index: int,
+                         waiter: Optional[threading.Event] = None
+                         ) -> List[ROOBatch]:
+        """``dataset.shard_batches`` with bounded retry + exponential
+        backoff + jitter on transient (OSError-shaped) failures. Corruption
+        is NOT retried — re-reading a rotten block yields the same bytes;
+        the dataset quarantines it instead."""
+        delay = self.retry_backoff_s
+        attempt = 0
+        while True:
+            try:
+                faults.maybe_fail("prefetch.io")    # injected transient I/O
+                return self.dataset.shard_batches(shard_index)
+            except ShardCorruptionError:
+                raise
+            except OSError:
+                if attempt >= self.max_retries:
+                    self.stats.read_failures += 1
+                    raise
+                self.stats.read_retries += 1
+                attempt += 1
+                # full jitter in [0.5, 1.5) x the exponential term: retries
+                # from many workers must not synchronize into a thundering
+                # herd against shared storage
+                sleep_s = min(delay * (0.5 + self._retry_rng.random()),
+                              self.retry_backoff_max_s)
+                if waiter is not None:
+                    if waiter.wait(sleep_s):
+                        raise        # producer being torn down: stop retrying
+                else:
+                    time.sleep(sleep_s)
+                delay *= 2.0
+
     # -- the deterministic host-side stream -------------------------------------
-    def _host_stream(self, start: Cursor, skip_batches: int = 0
+    def _host_stream(self, start: Cursor, skip_batches: int = 0,
+                     waiter: Optional[threading.Event] = None
                      ) -> Iterator[Tuple[ROOBatch, Cursor]]:
         """Stream from ``start``; the first ``skip_batches`` batches are
         dropped here, host-side, before any device transfer happens (the
@@ -115,7 +272,7 @@ class PrefetchLoader:
         if shard >= n_shards:
             epoch, shard, skip = epoch + 1, 0, 0
         while self.epochs is None or epoch < self.epochs:
-            packed = self.dataset.shard_batches(shard)
+            packed = self._read_with_retry(shard, waiter)
             if skip >= len(packed) > 0:
                 # cursors we emit always satisfy batch < len(packed); an
                 # out-of-range value means the shards or the batcher config
@@ -150,16 +307,21 @@ class PrefetchLoader:
             return
         yield from self._prefetch_iter(start, skip_batches)
 
-    def _prefetch_iter(self, start: Cursor, skip_batches: int = 0
-                       ) -> Iterator[Tuple[ROOBatch, Cursor]]:
-        q: "queue.Queue" = queue.Queue(maxsize=self.prefetch_depth)
-        stop = threading.Event()
-        _END = object()
+    def _spawn(self, q: "queue.Queue", gen: int, start: Cursor,
+               skip_batches: int) -> _Producer:
+        _END = _EndOfStream
 
         def _produce() -> None:
+            stop = prod.stop
             try:
-                for batch, nxt in self._host_stream(start, skip_batches):
-                    item = (self._place(batch), nxt)
+                for batch, nxt in self._host_stream(start, skip_batches,
+                                                    waiter=stop):
+                    spec = faults.fire("prefetch.stall")
+                    if spec is not None and spec.kind == "stall":
+                        # simulated hung I/O: go silent until abandoned
+                        stop.wait()
+                        return
+                    item = (gen, (self._place(batch), nxt))
                     while not stop.is_set():
                         try:
                             q.put(item, timeout=0.1)
@@ -168,27 +330,57 @@ class PrefetchLoader:
                             continue
                     if stop.is_set():
                         return
-                q.put(_END)
+                q.put((gen, _END))
             except BaseException as e:               # surface in consumer
-                if not stop.is_set():
-                    q.put(e)
+                if not prod.stop.is_set():
+                    q.put((gen, e))
 
-        thread = threading.Thread(target=_produce, daemon=True,
-                                  name="roo-prefetch")
-        thread.start()
+        prod = _Producer(gen, _produce)
+        self._producers.add(prod)
+        self._queues[prod] = q
+        prod.thread.start()
+        return prod
+
+    def _prefetch_iter(self, start: Cursor, skip_batches: int = 0
+                       ) -> Iterator[Tuple[ROOBatch, Cursor]]:
+        q: "queue.Queue" = queue.Queue(maxsize=self.prefetch_depth)
+        gen = 0
+        # where a replacement producer must resume: the cursor of the next
+        # batch the consumer has NOT yet received (+ any pending host-side
+        # skip, which only a producer that never delivered still owes)
+        resume: Tuple[Cursor, int] = (start, skip_batches)
+        prod = self._spawn(q, gen, *resume)
         try:
             while True:
-                item = q.get()
-                if item is _END:
+                try:
+                    item = q.get(timeout=self.stall_timeout_s)
+                except queue.Empty:
+                    # stall watchdog: the producer went silent past the
+                    # deadline — abandon it and restart at the current
+                    # cursor. The zombie's generation tag keeps any batch
+                    # it might still emit out of the stream.
+                    self.stats.producer_restarts += 1
+                    prod.stop.set()
+                    self._producers.discard(prod)
+                    self._queues.pop(prod, None)
+                    gen += 1
+                    prod = self._spawn(q, gen, *resume)
+                    continue
+                item_gen, payload = item
+                if item_gen != gen:          # stale batch from a zombie
+                    continue
+                if payload is _EndOfStream:
                     return
-                if isinstance(item, BaseException):
-                    raise item
-                yield item
+                if isinstance(payload, BaseException):
+                    raise payload
+                batch, nxt = payload
+                resume = (nxt, 0)
+                yield batch, nxt
         finally:
-            stop.set()
-            # unblock a producer stuck on a full queue
-            try:
-                while True:
-                    q.get_nowait()
-            except queue.Empty:
-                pass
+            prod.close(q)
+            self._producers.discard(prod)
+            self._queues.pop(prod, None)
+
+
+class _EndOfStream:
+    """Sentinel type: end of a producer's stream (compared by identity)."""

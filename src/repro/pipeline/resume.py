@@ -98,6 +98,16 @@ class PipelineDataSource:
         self._fingerprint = dataset_fingerprint(loader.dataset)
         self._pending: Dict[int, Cursor] = {}      # step -> resume cursor
 
+    def close(self) -> None:
+        """Shut down the underlying loader (joins producer threads)."""
+        self.loader.close()
+
+    def __enter__(self) -> "PipelineDataSource":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     # -- Trainer.run(batch_iter_fn=...) -----------------------------------------
     def batch_iter_fn(self, start_step: int) -> Iterator:
         cursor = Cursor()
@@ -131,14 +141,18 @@ class PipelineDataSource:
 
 def make_data_source(shard_dir: str, batcher_cfg, cursor_dir: str,
                      prefetch: bool = True, prefetch_depth: int = 3,
-                     sharding=None) -> PipelineDataSource:
+                     sharding=None, strict: bool = False,
+                     **loader_kwargs) -> PipelineDataSource:
     """Convenience: shard dir + batcher config -> ready-to-run data source.
 
     ``sharding`` is forwarded to PrefetchLoader so the loader thread places
     batches straight onto an SPMD mesh (see
-    ``repro.distributed.spmd.make_batch_sharding_fn``).
+    ``repro.distributed.spmd.make_batch_sharding_fn``). ``strict`` turns
+    corrupt-shard quarantine into a hard error; remaining keyword args
+    reach PrefetchLoader (retry/backoff/watchdog knobs).
     """
-    loader = PrefetchLoader(ShardDataset(shard_dir, batcher_cfg),
+    loader = PrefetchLoader(ShardDataset(shard_dir, batcher_cfg,
+                                         strict=strict),
                             prefetch=prefetch, prefetch_depth=prefetch_depth,
-                            sharding=sharding)
+                            sharding=sharding, **loader_kwargs)
     return PipelineDataSource(loader, CursorStore(cursor_dir))

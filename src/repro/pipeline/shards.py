@@ -27,8 +27,10 @@ import os
 from typing import Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.joiner import ROOSample
-from repro.data.storage import (SCHEMA_VERSION, decode_roo_shard,
-                                encode_roo_shard, peek_shard_header)
+from repro.data.storage import (SCHEMA_VERSION, ShardCorruptionError,
+                                decode_roo_shard, encode_roo_shard,
+                                peek_shard_header)
+from repro.reliability import faults
 
 MANIFEST_NAME = "manifest.json"
 
@@ -111,6 +113,15 @@ class ShardWriter:
         self._shards: List[ShardInfo] = []
         self._closed = False
         os.makedirs(out_dir, exist_ok=True)
+        # sweep torn tmp files a killed writer left behind — they were
+        # never committed (manifest can't reference them) and a restarted
+        # writer regenerates those shard indices from scratch
+        for name in os.listdir(out_dir):
+            if name.endswith(".tmp"):
+                try:
+                    os.remove(os.path.join(out_dir, name))
+                except OSError:
+                    pass
 
     def append(self, sample: ROOSample) -> None:
         assert not self._closed, "writer already closed"
@@ -133,6 +144,12 @@ class ShardWriter:
         tmp = path + ".tmp"
         with open(tmp, "wb") as f:
             f.write(blob)
+        spec = faults.fire("shard.write")
+        if spec is not None and spec.kind == "torn":
+            # simulated kill between tmp write and rename: the tmp file
+            # stays, the shard is never committed, the writer dies
+            raise faults.InjectedFault(
+                f"injected writer kill before committing {name}")
         os.rename(tmp, path)                       # atomic commit
         self._shards.append(ShardInfo(
             filename=name, n_requests=header["n_requests"],
@@ -179,8 +196,27 @@ def load_manifest(shard_dir: str) -> ShardManifest:
 
 
 def read_shard(shard_dir: str, shard: ShardInfo) -> List[ROOSample]:
+    """Read + decode one shard.
+
+    Raises :class:`TransientFault`/``OSError`` for (possibly injected)
+    transient I/O failures — retryable — and
+    :class:`ShardCorruptionError` when the blob fails integrity checks
+    (CRC mismatch, truncated frame) — NOT retryable; lenient readers
+    (``ShardDataset``) quarantine the shard instead of crashing.
+    """
+    spec = faults.fire("shard.read")
+    if spec is not None and spec.kind == "error":   # injected transient I/O
+        raise faults.TransientFault(
+            f"injected read error on {shard.filename}")
     with open(os.path.join(shard_dir, shard.filename), "rb") as f:
-        return decode_roo_shard(f.read())
+        blob = f.read()
+    if spec is not None and spec.kind == "corrupt":
+        blob = faults.corrupt_bytes("shard.read", blob, spec)
+    try:
+        return decode_roo_shard(blob)
+    except ShardCorruptionError as e:
+        raise ShardCorruptionError(
+            f"{shard.filename}: {e}") from e
 
 
 def read_all(shard_dir: str,

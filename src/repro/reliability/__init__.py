@@ -1,0 +1,22 @@
+"""Fault injection + graceful degradation (docs/RELIABILITY.md).
+
+``faults`` is the deterministic, seeded injection layer; the degradation
+behaviors it proves out live in the subsystems themselves:
+
+  * data/storage.py      — per-block CRC32 (v2 frame), ShardCorruptionError
+  * pipeline/shards.py   — corrupt-shard quarantine + accounting
+  * pipeline/prefetch.py — bounded retry w/ backoff, stall watchdog, close()
+  * train/checkpoint.py  — verify-on-restore digests, fallback to last valid
+  * train/loop.py        — non-finite loss/grad skip-step guard
+  * serve/engine.py      — per-batch failure isolation + circuit breaker
+"""
+from repro.reliability.faults import (ENV_VAR, FaultPlan, FaultSpec,
+                                      FaultStats, InjectedFault,
+                                      TransientFault, active_plan, fire,
+                                      install, maybe_fail, use_plan)
+
+__all__ = [
+    "ENV_VAR", "FaultPlan", "FaultSpec", "FaultStats", "InjectedFault",
+    "TransientFault", "active_plan", "fire", "install", "maybe_fail",
+    "use_plan",
+]

@@ -36,19 +36,44 @@ import numpy as np
 
 from repro.core.joiner import ROOSample
 from repro.data.batcher import BatcherConfig, BatchPlan, ROOBatcher
+from repro.reliability import faults
 from repro.serve.bucketing import BucketLadder, BucketStats
 from repro.serve.user_cache import UserTowerCache, request_key
+
+
+class ScoreError:
+    """Returned (never raised) in place of a score array when the engine
+    could not score a request: its batch's forward failed, or the circuit
+    breaker shed it. Callers check ``isinstance(x, ScoreError)``; healthy
+    requests in the same stream still get real scores."""
+    __slots__ = ("reason", "shed")
+
+    def __init__(self, reason: str, shed: bool = False):
+        self.reason = reason
+        self.shed = shed
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"ScoreError({self.reason!r}, shed={self.shed})"
 
 
 @dataclasses.dataclass
 class EnginePolicy:
     """Admission policy: a flush happens when the pending queue reaches
     ``max_requests`` requests or ``max_impressions`` impressions (size), or
-    when the oldest pending request has waited ``max_delay_ms`` (deadline)."""
+    when the oldest pending request has waited ``max_delay_ms`` (deadline).
+
+    Circuit breaker: after ``breaker_threshold`` CONSECUTIVE batch scoring
+    failures the engine stops invoking the model and sheds incoming work
+    (instant ``ScoreError(shed=True)``) for ``breaker_cooldown_s``; the
+    first batch after the cooldown is a half-open trial — success closes
+    the breaker, failure re-opens it. ``breaker_threshold=0`` disables
+    shedding (every batch is always attempted)."""
     max_requests: int = 64
     max_impressions: int = 512
     max_delay_ms: float = 2.0
     hist_len: int = 64
+    breaker_threshold: int = 5
+    breaker_cooldown_s: float = 1.0
 
 
 @dataclasses.dataclass
@@ -61,6 +86,10 @@ class EngineStats:
     n_deadline_flushes: int = 0
     n_forced_flushes: int = 0
     n_full_cache_batches: int = 0      # batches whose user tower was skipped
+    n_failed_batches: int = 0          # forwards that raised (isolated)
+    n_failed_requests: int = 0         # requests resolved to ScoreError
+    n_shed_requests: int = 0           # requests shed by the open breaker
+    n_breaker_opens: int = 0           # open transitions (incl. re-opens)
     buckets: BucketStats = dataclasses.field(default_factory=BucketStats)
 
 
@@ -128,6 +157,9 @@ class ScoringEngine:
         # the last scored batch — used to shape empty results when a whole
         # flush-group has zero impressions and the model never runs
         self._score_tail: Tuple[int, ...] = ()
+        # circuit breaker: consecutive batch failures + open-until deadline
+        self._breaker_failures = 0
+        self._breaker_open_until: Optional[float] = None
 
     @property
     def params(self):
@@ -222,6 +254,19 @@ class ScoringEngine:
                 got.append(piece)
                 if len(got) == parts_needed[key]:
                     del parts_got[key], parts_needed[key]
+                    errs = [p for p in got if isinstance(p, ScoreError)]
+                    if errs:
+                        # one bad piece poisons the request: a partial
+                        # score array misaligned with item_ids is worse
+                        # than an explicit error
+                        hard = [e for e in errs if not e.shed]
+                        err = hard[0] if hard else errs[0]
+                        if hard:
+                            self.stats.n_failed_requests += 1
+                        else:
+                            self.stats.n_shed_requests += 1
+                        yield key, err
+                        continue
                     yield key, (np.concatenate(got, axis=0)
                                 if len(got) > 1 else got[0])
 
@@ -266,7 +311,23 @@ class ScoringEngine:
             hist_len=self.policy.hist_len))
         samples = [s for _, s in group]
         for batch, plan in batcher.batches_with_plan(samples):
-            scores = self._score_batch(batch, samples, plan)
+            if self._breaker_sheds():
+                for p in plan.requests:
+                    yield (group[p.request_index][0],
+                           ScoreError("shed: circuit breaker open",
+                                      shed=True))
+                continue
+            try:
+                scores = self._score_batch(batch, samples, plan)
+            except Exception as e:   # isolation boundary: batch != engine
+                self._breaker_record_failure()
+                self.stats.n_failed_batches += 1
+                for p in plan.requests:
+                    yield (group[p.request_index][0],
+                           ScoreError(f"scoring failed: {e!r}"))
+                continue
+            self._breaker_failures = 0
+            self._breaker_open_until = None
             self.stats.n_batches += 1
             for p in plan.requests:
                 if p.n_dropped:
@@ -276,8 +337,30 @@ class ScoringEngine:
                 yield (group[p.request_index][0],
                        scores[p.slot_start:p.slot_start + p.n_packed])
 
+    # ---- circuit breaker -----------------------------------------------------
+    def _breaker_sheds(self) -> bool:
+        """True when the open breaker should shed the next batch; an expired
+        cooldown admits the batch as a half-open trial."""
+        if (self.policy.breaker_threshold <= 0
+                or self._breaker_open_until is None):
+            return False
+        if self.clock() < self._breaker_open_until:
+            return True
+        self._breaker_open_until = None        # half-open: one trial batch
+        return False
+
+    def _breaker_record_failure(self) -> None:
+        self._breaker_failures += 1
+        if (self.policy.breaker_threshold > 0
+                and self._breaker_failures >= self.policy.breaker_threshold):
+            if self._breaker_open_until is None:
+                self.stats.n_breaker_opens += 1
+            self._breaker_open_until = (self.clock()
+                                        + self.policy.breaker_cooldown_s)
+
     def _score_batch(self, batch, samples: List[ROOSample],
                      plan: BatchPlan) -> np.ndarray:
+        faults.maybe_fail("engine.score")   # injected forward failure
         from repro.kernels.dispatch import use_backend
         with use_backend(self.attn_backend):
             scores = self._score_batch_device(batch, samples, plan)

@@ -21,16 +21,24 @@ Designed for thousands-of-nodes operation:
 """
 from __future__ import annotations
 
+import io
 import json
 import os
 import pickle
 import shutil
 import threading
 import time
+import zlib
 from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
+
+from repro.reliability import faults
+
+
+class CheckpointCorruptionError(ValueError):
+    """An explicitly requested checkpoint step failed integrity checks."""
 
 
 def _is_sharded(x) -> bool:
@@ -139,6 +147,15 @@ class CheckpointManager:
         self.keep_last = keep_last
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        # a writer killed mid-save leaves step_*.tmp dirs; they were never
+        # committed (all_steps ignores them) so they are pure dead weight
+        self._sweep_tmp()
+
+    def _sweep_tmp(self) -> None:
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, name),
+                              ignore_errors=True)
 
     # ---- save -----------------------------------------------------------------
     def _path(self, step: int) -> str:
@@ -158,21 +175,43 @@ class CheckpointManager:
         def _write():
             tmp = self._path(step) + ".tmp"
             os.makedirs(tmp, exist_ok=True)
-            with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
-                np.savez(f, **host)
-            with open(os.path.join(tmp, "treedef.pkl"), "wb") as f:
-                pickle.dump(treedef, f)
+            digests: Dict[str, int] = {}   # filename -> crc32 of bytes
+
+            def put(name: str, blob: bytes) -> None:
+                with open(os.path.join(tmp, name), "wb") as f:
+                    f.write(blob)
+                digests[name] = zlib.crc32(blob)
+
+            buf = io.BytesIO()
+            np.savez(buf, **host)
+            put("arrays.npz", buf.getvalue())
+            put("treedef.pkl", pickle.dumps(treedef))
             if sharded_manifest:
-                with open(os.path.join(tmp, "sharding.json"), "w") as f:
-                    json.dump(sharded_manifest, f)
+                put("sharding.json",
+                    json.dumps(sharded_manifest).encode("utf-8"))
+            spec = faults.fire("ckpt.write")
+            if spec is not None and spec.kind == "torn":
+                # simulated kill between payload write and commit: the
+                # .tmp dir stays behind, meta.json is never written, and
+                # all_steps() never reports this step
+                return
             with open(os.path.join(tmp, "meta.json"), "w") as f:
                 json.dump({"step": step, "ts": time.time(),
                            "n_arrays": len(flat),
-                           "n_sharded": len(sharded_manifest)}, f)
+                           "n_sharded": len(sharded_manifest),
+                           "digests": digests}, f)
             final = self._path(step)
             if os.path.exists(final):
                 shutil.rmtree(final)
             os.rename(tmp, final)          # atomic commit
+            if spec is not None and spec.kind == "corrupt":
+                # bit rot after commit: flip a byte in the committed
+                # payload so only digest verification can catch it
+                apath = os.path.join(final, "arrays.npz")
+                with open(apath, "rb") as f:
+                    blob = f.read()
+                with open(apath, "wb") as f:
+                    f.write(faults.corrupt_bytes("ckpt.write", blob, spec))
             self._gc()
 
         if blocking:
@@ -190,6 +229,7 @@ class CheckpointManager:
         steps = self.all_steps()
         for s in steps[:-self.keep_last]:
             shutil.rmtree(self._path(s), ignore_errors=True)
+        self._sweep_tmp()
 
     # ---- restore ----------------------------------------------------------------
     def all_steps(self) -> List[int]:
@@ -204,6 +244,41 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    # ---- integrity --------------------------------------------------------------
+    def verify(self, step: int) -> bool:
+        """True iff every payload file matches the crc32 digest recorded in
+        the step's meta.json. Checkpoints written before digests existed
+        have nothing to check against and are trusted."""
+        path = self._path(step)
+        try:
+            with open(os.path.join(path, "meta.json")) as f:
+                meta = json.load(f)
+        except (OSError, ValueError):
+            return False
+        digests = meta.get("digests")
+        if digests is None:
+            return True                     # pre-digest checkpoint
+        for name, want in digests.items():
+            try:
+                with open(os.path.join(path, name), "rb") as f:
+                    got = zlib.crc32(f.read())
+            except OSError:
+                return False
+            if got != int(want):
+                return False
+        return True
+
+    def valid_steps(self) -> List[int]:
+        return [s for s in self.all_steps() if self.verify(s)]
+
+    def latest_valid_step(self) -> Optional[int]:
+        """Newest step that passes integrity verification — the step
+        ``restore()`` falls back to when the latest commit rotted."""
+        for s in reversed(self.all_steps()):
+            if self.verify(s):
+                return s
+        return None
+
     def _load_manifest(self, path: str) -> Dict[str, dict]:
         mpath = os.path.join(path, "sharding.json")
         if not os.path.exists(mpath):
@@ -212,10 +287,21 @@ class CheckpointManager:
             return json.load(f)
 
     def restore(self, step: Optional[int] = None) -> Any:
-        """Restore as host (global) arrays; shard entries are reassembled."""
-        step = step if step is not None else self.latest_step()
+        """Restore as host (global) arrays; shard entries are reassembled.
+
+        With ``step=None`` restores the newest step that PASSES integrity
+        verification (silently skipping corrupt/torn ones); an explicitly
+        requested corrupt step raises :class:`CheckpointCorruptionError`.
+        """
         if step is None:
-            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+            step = self.latest_valid_step()
+            if step is None:
+                raise FileNotFoundError(
+                    f"no committed valid checkpoint in {self.dir}")
+        elif not self.verify(step):
+            raise CheckpointCorruptionError(
+                f"checkpoint step {step} in {self.dir} failed integrity "
+                f"verification (crc mismatch or missing payload)")
         path = self._path(step)
         with open(os.path.join(path, "treedef.pkl"), "rb") as f:
             treedef = pickle.load(f)
@@ -244,7 +330,7 @@ class CheckpointManager:
 
     def saved_specs(self, step: Optional[int] = None) -> Dict[int, list]:
         """leaf index -> JSON PartitionSpec for sharded leaves of a step."""
-        step = step if step is not None else self.latest_step()
+        step = step if step is not None else self.latest_valid_step()
         if step is None:
             raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
         manifest = self._load_manifest(self._path(step))

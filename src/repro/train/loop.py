@@ -27,8 +27,25 @@ import jax
 import jax.numpy as jnp
 
 from repro.embeddings import sparse as _sp
+from repro.reliability import faults
 from repro.train.checkpoint import CheckpointManager
 from repro.train.optim import Optimizer
+
+
+class NonFiniteLossError(RuntimeError):
+    """Raised when ``halt_after_skips`` consecutive steps produced a
+    non-finite loss/gradient — the run is diverging, not glitching."""
+
+
+def _poison_batch(batch):
+    """Replace the first float leaf with NaNs (``train.batch`` nan fault)."""
+    flat, tree = jax.tree_util.tree_flatten(batch)
+    for i, leaf in enumerate(flat):
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype,
+                                                     jnp.floating):
+            flat[i] = jnp.full_like(leaf, jnp.nan)
+            break
+    return jax.tree_util.tree_unflatten(tree, flat)
 
 
 @dataclasses.dataclass
@@ -39,6 +56,10 @@ class TrainLoopConfig:
     microbatches: int = 1          # grad accumulation factor
     ckpt_dir: Optional[str] = None
     keep_last: int = 3
+    # halt after this many CONSECUTIVE non-finite (skipped) steps; 0 keeps
+    # the guard passive (skips counted in metrics, loop never halts).
+    # Enabling it polls the skip flag every step (one small host sync).
+    halt_after_skips: int = 0
 
 
 def make_train_step(loss_fn: Callable, opt: Optimizer,
@@ -104,10 +125,21 @@ def make_train_step(loss_fn: Callable, opt: Optimizer,
         gnorm = jnp.sqrt(sum(_sp.sq_sum(g) for g in
                              jax.tree.leaves(grads, is_leaf=_sp.is_sparse))
                          + 1e-20)
+        # non-finite guard: a NaN/Inf loss or gradient must not poison the
+        # parameters — keep the old params/opt for this step (the step
+        # counter still advances so data alignment is unchanged) and
+        # surface the skip in metrics
+        ok = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+
+        def keep(new, old):
+            return jnp.where(ok, new, old)
+        new_params = jax.tree.map(keep, new_params, params)
+        new_opt = jax.tree.map(keep, new_opt, state["opt"])
         # {**state, ...} carries pass-through keys (e.g. the base "rng")
         new_state = {**state, "params": new_params, "opt": new_opt,
                      "step": state["step"] + 1}
-        return new_state, {"loss": loss, "grad_norm": gnorm}
+        return new_state, {"loss": loss, "grad_norm": gnorm,
+                           "skipped": (~ok).astype(jnp.int32)}
 
     if plan is not None and plan.enabled and state_shardings is not None:
         # metrics sharding left to the compiler (None = unconstrained)
@@ -142,6 +174,7 @@ class Trainer:
         self.ckpt = (CheckpointManager(cfg.ckpt_dir, cfg.keep_last)
                      if cfg.ckpt_dir else None)
         self.history: list = []
+        self.skipped_steps = 0   # non-finite steps the guard neutralized
 
     def init_state(self, rng: Optional[jax.Array] = None) -> Dict:
         params = self.init_params_fn()
@@ -188,16 +221,31 @@ class Trainer:
         state = self._prepare(state)
         base_rng = jnp.asarray(state["rng"])   # checkpointed base key wins
         it = batch_iter_fn(start)
-        t0 = time.time()
+        t0 = time.monotonic()
+        consecutive_skips = 0
         for step in range(start, self.cfg.total_steps):
             batch = next(it)
+            spec = faults.fire("train.batch")
+            if spec is not None and spec.kind == "nan":
+                batch = _poison_batch(batch)
             if self._spmd:
                 # cached shardings; no-op for loader-placed batches
                 batch = self._place_batch(batch)
             state, metrics = self.step_fn(state, batch,
                                           jax.random.fold_in(base_rng, step))
+            if self.cfg.halt_after_skips > 0:
+                if int(metrics["skipped"]):
+                    consecutive_skips += 1
+                    self.skipped_steps += 1
+                    if consecutive_skips >= self.cfg.halt_after_skips:
+                        raise NonFiniteLossError(
+                            f"{consecutive_skips} consecutive non-finite "
+                            f"steps ending at step {step + 1} — halting "
+                            f"instead of spinning on a diverged run")
+                else:
+                    consecutive_skips = 0
             if (step + 1) % self.cfg.log_every == 0:
-                rate = (step + 1 - start) / max(time.time() - t0, 1e-9)
+                rate = (step + 1 - start) / max(time.monotonic() - t0, 1e-9)
                 row = {"step": step + 1, "loss": float(metrics["loss"]),
                        "steps_per_s": rate}
                 row.update({k: float(v) for k, v in metrics.items()
