@@ -9,6 +9,14 @@ import jax
 
 # rows collected by emit() for the optional --json artifact (run.py)
 _ROWS: List[dict] = []
+# scenarios benchmarks ran under (name -> content hash): provenance for
+# the JSON artifact, so a recorded number can be tied to the exact spec
+_SCENARIOS: dict = {}
+
+
+def note_scenario(spec) -> None:
+    """Record the active ScenarioSpec's content hash in the artifact."""
+    _SCENARIOS[spec.name] = spec.content_hash()
 
 
 def time_fn(fn, *args, warmup: int = 3, iters: int = 12) -> float:
@@ -39,12 +47,14 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
 
 
 def write_json(path: Optional[str]) -> None:
-    """Dump every emitted row as a JSON artifact (CI uploads this)."""
+    """Dump every emitted row as a JSON artifact (CI uploads this),
+    stamped with the scenario hashes the rows were produced under."""
     if not path:
         return
     with open(path, "w") as f:
-        json.dump({"rows": _ROWS}, f, indent=1)
-    print(f"# wrote {len(_ROWS)} rows to {path}", flush=True)
+        json.dump({"rows": _ROWS, "scenarios": _SCENARIOS}, f, indent=1)
+    print(f"# wrote {len(_ROWS)} rows to {path} "
+          f"({len(_SCENARIOS)} scenario hash(es))", flush=True)
 
 
 def make_dataset(n_requests=400, product="product_a", seed=0,

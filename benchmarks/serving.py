@@ -9,6 +9,12 @@ the assigned shapes, user-tower cache on vs off.
                          can dedupe the RO side — paper §2.2 at inference);
   serving_retrieval    — 1 user vs N candidates, one matvec + top-k.
 
+Fixtures come from the registered ScenarioSpecs (configs/registry.py): the
+engines are built through ``ScoringEngine.from_scenario`` — the same path
+the launcher and CI smoke use — and the active spec hashes are stamped
+into the JSON artifact via ``common.note_scenario``, so every recorded
+number is traceable to the exact config that produced it.
+
 ``--smoke`` (via benchmarks/run.py) runs every regime at reduced scale; the
 full run sizes bulk toward the paper's 262 144-impression regime (scaled to
 what a CPU host finishes in minutes — the code path is identical).
@@ -21,12 +27,10 @@ from typing import List
 import jax
 import numpy as np
 
-from benchmarks.common import emit, make_dataset
-from repro.configs import roo_models as rm
-from repro.models.lsr import (lsr_init, lsr_logits_from_user, lsr_logits_roo,
-                              lsr_user_repr)
-from repro.models.two_tower import two_tower_init, user_tower
-from repro.serve.serving import ROOServer, ServeConfig, retrieval_scoring
+from benchmarks.common import emit, make_dataset, note_scenario
+from repro.serve.engine import EnginePolicy, ScoringEngine
+from repro.serve.serving import retrieval_scoring
+from repro.serve.user_cache import UserTowerCache
 
 
 def _pcts(lat_ms: List[float]):
@@ -34,27 +38,46 @@ def _pcts(lat_ms: List[float]):
     return (float(np.percentile(a, 50)), float(np.percentile(a, 99)))
 
 
-def _lsr_fns(cfg):
-    return (lambda p, b: lsr_logits_roo(p, cfg, b)[:, 0],
-            lambda p, b: lsr_user_repr(p, cfg, b),
-            lambda p, b, u: lsr_logits_from_user(p, cfg, b, u)[:, 0])
+def _engine(spec, bundle, params, cache: bool = False) -> ScoringEngine:
+    """Engine from the spec's serve section + the bundle's model halves,
+    scoring task 0 only — the benchmark's historical unit of work (the
+    committed baseline predates multi-task serving adapters), so the
+    gated rows stay comparable."""
+    serve = spec.serve
+    policy = EnginePolicy(max_requests=serve.max_requests,
+                          max_impressions=serve.max_impressions,
+                          max_delay_ms=serve.max_delay_ms,
+                          hist_len=spec.batcher.hist_len,
+                          breaker_threshold=serve.breaker_threshold,
+                          breaker_cooldown_s=serve.breaker_cooldown_s)
+    kw = {}
+    if cache:
+        halves = bundle.serve
+        kw = dict(user_fn=halves.user_fn,
+                  score_from_user=lambda p, b, u:
+                      halves.score_from_user(p, b, u)[:, 0],
+                  cache=UserTowerCache(capacity=serve.cache_capacity))
+    return ScoringEngine(params,
+                         lambda p, b: bundle.serve.score_fn(p, b)[:, 0],
+                         policy=policy, **kw)
 
 
-def _serve_p99(params, cfg, requests, smoke: bool) -> None:
-    score_fn, _, _ = _lsr_fns(cfg)
-    server = ROOServer(params, score_fn, ServeConfig(b_ro=16, b_nro=128))
+def _serve_p99(spec, bundle, params, requests, smoke: bool) -> None:
+    engine = _engine(spec.with_overrides({"serve.max_requests": 16,
+                                          "serve.max_impressions": 128}),
+                     bundle, params)
     wave, n_waves = 8, (10 if smoke else 60)
     # warm every ladder rung a real wave can land on, so the timed loop
     # measures steady-state latency, not first-hit jit compiles
     by_size = sorted(requests, key=lambda r: r.num_impressions)
-    server.score_requests(by_size[:wave])
-    server.score_requests(by_size[-wave:])
+    engine.score_requests(by_size[:wave])
+    engine.score_requests(by_size[-wave:])
     waves = [requests[(i * wave) % (len(requests) - wave):][:wave]
              for i in range(n_waves)]
     lat = []
     for w in waves:
         t0 = time.perf_counter()
-        server.score_requests(w)
+        engine.score_requests(w)
         lat.append((time.perf_counter() - t0) * 1e3)
     p50, p99 = _pcts(lat)
     qps = wave / (np.mean(lat) / 1e3)
@@ -62,11 +85,10 @@ def _serve_p99(params, cfg, requests, smoke: bool) -> None:
     # median and would trip compare.py on noise
     emit("serving_online_p50", p50 * 1e3,
          f"qps={qps:.0f};p50_ms={p50:.1f};p99_ms={p99:.1f};"
-         f"buckets={server.stats.buckets.distinct_shapes}")
+         f"buckets={engine.stats.buckets.distinct_shapes}")
 
 
-def _serve_bulk(params, cfg, requests, smoke: bool) -> None:
-    score_fn, user_fn, from_user_fn = _lsr_fns(cfg)
+def _serve_bulk(spec, bundle, params, requests, smoke: bool) -> None:
     # repeat traffic: the same users re-scored against candidate waves —
     # the regime where the RO side is redundant across requests
     target_imps = 1024 if smoke else 32768     # paper regime: 262144
@@ -79,19 +101,20 @@ def _serve_bulk(params, cfg, requests, smoke: bool) -> None:
             if n_imps >= target_imps:
                 break
 
-    def run_once(server):
+    def run_once(engine):
         checksum, n = 0.0, 0
         t0 = time.perf_counter()
         # streaming: one flush-group of scores host-side at a time
-        for _, scores in server.score_requests_iter(traffic):
+        for _, scores in engine.score_stream(traffic):
             checksum += float(scores.sum())
             n += scores.shape[0]
         return time.perf_counter() - t0, n, checksum
 
-    off = ROOServer(params, score_fn, ServeConfig(b_ro=32, b_nro=256))
-    on = ROOServer(params, score_fn,
-                   ServeConfig(b_ro=32, b_nro=256, cache_user_tower=True),
-                   user_fn=user_fn, score_from_user=from_user_fn)
+    bulk = spec.with_overrides({"serve.max_requests": 32,
+                                "serve.max_impressions": 256})
+    off = _engine(bulk, bundle, params)
+    on = _engine(bulk.with_overrides({"serve.cache_user_tower": True}),
+                 bundle, params, cache=True)
     run_once(off)                                  # warm jit for both
     run_once(on)                                   # ... and the cache
     # best-of-3 (cf. common.time_fn): contention only ever adds time
@@ -107,13 +130,15 @@ def _serve_bulk(params, cfg, requests, smoke: bool) -> None:
          f"full_cache_batches={on.stats.n_full_cache_batches}")
 
 
-def _serve_retrieval(rng, requests, smoke: bool) -> None:
-    tt = rm.retrieval_config()
-    tparams = two_tower_init(rng, tt)
-    from repro.data.batcher import BatcherConfig, ROOBatcher
-    batch = next(ROOBatcher(BatcherConfig(
-        b_ro=16, b_nro=128, hist_len=64)).batches(requests))
-    u = user_tower(tparams, tt, batch)[0]
+def _serve_retrieval(spec, rng, requests, smoke: bool) -> None:
+    from repro.models.two_tower import user_tower
+    from repro.scenario.build import build_batcher_cfg, build_model
+    bundle = build_model(spec, rng)
+    from repro.data.batcher import ROOBatcher
+    batch = next(ROOBatcher(build_batcher_cfg(
+        spec.with_overrides({"batcher.b_ro": 16, "batcher.b_nro": 128})
+    )).batches(requests))
+    u = user_tower(bundle.params, bundle.cfg, batch)[0]
     n_cand = 65536 if smoke else 1_000_000
     cand = jax.random.normal(rng, (n_cand, u.shape[-1])) * 0.1
     fn = jax.jit(lambda uu, cc: retrieval_scoring(uu, cc, k=100))
@@ -132,14 +157,19 @@ def _serve_retrieval(rng, requests, smoke: bool) -> None:
 
 
 def run(smoke: bool = False) -> None:
+    from repro.configs.registry import scenario
+    from repro.scenario.build import build_model
     rng = jax.random.PRNGKey(0)
-    cfg = rm.lsr_config("userarch_hstu")
-    params = lsr_init(rng, cfg)
+    lsr = scenario("roo-lsr")
+    note_scenario(lsr)
+    bundle = build_model(lsr, rng)                 # shared by both regimes
     roo, _ = make_dataset(n_requests=(60 if smoke else 300),
                           product="product_b")
-    _serve_p99(params, cfg, roo, smoke)
-    _serve_bulk(params, cfg, roo, smoke)
-    _serve_retrieval(rng, roo, smoke)
+    _serve_p99(lsr, bundle, bundle.params, roo, smoke)
+    _serve_bulk(lsr, bundle, bundle.params, roo, smoke)
+    ret = scenario("roo-retrieval")
+    note_scenario(ret)
+    _serve_retrieval(ret, rng, roo, smoke)
 
 
 if __name__ == "__main__":

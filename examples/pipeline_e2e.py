@@ -3,6 +3,11 @@
 simulated kill-and-restart proving the (shard, offset) cursor resumes
 bit-identically.
 
+Every fixture (stream, batcher, model, provenance hash) derives from ONE
+declarative ScenarioSpec (docs/CONFIG.md) — the same factory the launcher
+uses — so the shards this demo writes carry the spec's data hash and the
+resume cursor is keyed by it.
+
 Run:  PYTHONPATH=src python examples/pipeline_e2e.py [--steps 60]
 """
 import argparse
@@ -11,16 +16,16 @@ import shutil
 import tempfile
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import roo_models as rm
-from repro.data.batcher import BatcherConfig
-from repro.data.events import EventSimulator, EventStreamConfig
-from repro.models.lsr import lsr_init, lsr_loss
+from repro.configs.registry import scenario
+from repro.data.events import EventSimulator
 from repro.pipeline import (CursorStore, OnlineJoinConfig,
                             PipelineDataSource, PrefetchLoader, ShardDataset,
                             WatermarkJoiner, write_samples)
+from repro.scenario.build import (build_batcher_cfg, build_model,
+                                  build_stream_cfg, cursor_fingerprint,
+                                  shard_provenance)
 from repro.train.loop import Trainer, TrainLoopConfig
 from repro.train.optim import adam
 
@@ -33,12 +38,20 @@ def main():
     root = tempfile.mkdtemp(prefix="roo_pipeline_demo_")
     shard_dir = os.path.join(root, "shards")
 
+    # 0) one spec drives the whole demo: stream, join window, shard size,
+    #    batcher shapes, model, and the provenance/cursor hashes
+    spec = scenario("roo-lsr", {"data.source": "disk",
+                                "data.n_requests": 600,
+                                "data.late_fraction": args.late_fraction,
+                                "data.requests_per_shard": 128})
+    print(f"scenario {spec.name} ({spec.content_hash()}, "
+          f"data hash {spec.data_hash()})")
+
     # 1) ingest: simulate a request log with a late-conversion tail and
     #    join it online under a bounded label wait
-    events = EventSimulator(EventStreamConfig(
-        n_requests=600, hist_init_max=48, seed=0,
-        late_fraction=args.late_fraction)).stream()
-    joiner = WatermarkJoiner(OnlineJoinConfig(label_wait_s=600.0))
+    events = EventSimulator(build_stream_cfg(spec)).stream()
+    joiner = WatermarkJoiner(OnlineJoinConfig(
+        label_wait_s=spec.data.label_wait_s))
     samples = joiner.join(events)
     st = joiner.stats
     print(f"join: {st.requests_emitted} requests, "
@@ -47,8 +60,12 @@ def main():
           f"({st.conversions_late} late conversions), "
           f"mean close lag {st.mean_close_lag_s:.0f}s")
 
-    # 2) store: real columnar shard files with RO-payload dedup
-    manifest = write_samples(shard_dir, samples, requests_per_shard=128)
+    # 2) store: real columnar shard files with RO-payload dedup, stamped
+    #    with the spec's provenance (scenario + data hash)
+    manifest = write_samples(
+        shard_dir, samples,
+        requests_per_shard=spec.data.requests_per_shard,
+        provenance=shard_provenance(spec))
     saved = sum(s.ro_dedup_saved for s in manifest.shards)
     print(f"store: {len(manifest.shards)} shard(s), "
           f"{manifest.n_bytes / 1e6:.2f} MB, "
@@ -56,24 +73,24 @@ def main():
 
     # 3) train from disk through the prefetching loader, checkpointing the
     #    cursor with the model state
-    cfg = rm.lsr_config("userarch_hstu")
     rng = jax.random.PRNGKey(0)
-    params = lsr_init(rng, cfg)
-    bcfg = BatcherConfig(b_ro=32, b_nro=192, hist_len=64)
+    bundle = build_model(spec, rng)
+    bcfg = build_batcher_cfg(spec)
 
     def make_trainer(ckpt_dir):
-        return Trainer(lambda p, b, r: lsr_loss(p, cfg, b), adam(1e-3),
+        return Trainer(bundle.loss_fn, adam(spec.train.lr_dense),
                        TrainLoopConfig(total_steps=args.steps,
                                        ckpt_every=max(args.steps // 3, 1),
                                        log_every=max(args.steps // 3, 1),
                                        ckpt_dir=ckpt_dir),
-                       lambda: params)
+                       lambda: bundle.params)
 
     def make_source(cursor_dir, prefetch=True):
         return PipelineDataSource(
             PrefetchLoader(ShardDataset(shard_dir, bcfg),
                            prefetch=prefetch),
-            CursorStore(cursor_dir))
+            CursorStore(cursor_dir),
+            fingerprint=cursor_fingerprint(spec, manifest))
 
     src = make_source(os.path.join(root, "cur_full"))
     full = make_trainer(os.path.join(root, "ckpt_full")).run(

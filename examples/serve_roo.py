@@ -1,6 +1,8 @@
 """ROO inference (paper §2.2): the request-centric serving engine.
 
-Demonstrates the full serving path:
+Demonstrates the full serving path, driven by the declarative scenario
+surface (docs/CONFIG.md) — the engine, model halves, and request stream
+all come from one ``ScenarioSpec``:
   * request-aligned scoring — one score array per request, exactly aligned
     with ``request.item_ids`` (zero-impression and oversize requests
     included);
@@ -16,68 +18,64 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import roo_models as rm
-from repro.core.joiner import RequestLevelJoiner
-from repro.data.batcher import BatcherConfig, ROOBatcher
-from repro.data.events import EventSimulator, EventStreamConfig
-from repro.models.lsr import (lsr_init, lsr_logits_from_user, lsr_logits_roo,
-                              lsr_user_repr)
-from repro.models.two_tower import two_tower_init, user_tower
-from repro.serve.serving import ROOServer, ServeConfig, retrieval_scoring
+from repro.configs.registry import scenario
+from repro.data.batcher import ROOBatcher
+from repro.scenario.build import build_batcher_cfg, build_model, build_samples
+from repro.serve.engine import ScoringEngine
+from repro.serve.serving import retrieval_scoring
 
 
 def main():
     rng = jax.random.PRNGKey(0)
 
     # --- late-stage ranking serving: batched ROO requests --------------------
-    cfg = rm.lsr_config("userarch_hstu")
-    params = lsr_init(rng, cfg)
-    server = ROOServer(
-        params, lambda p, b: lsr_logits_roo(p, cfg, b)[:, 0],
-        ServeConfig(b_ro=32, b_nro=192, cache_user_tower=True),
-        user_fn=lambda p, b: lsr_user_repr(p, cfg, b),
-        score_from_user=lambda p, b, u: lsr_logits_from_user(p, cfg, b, u)[:, 0])
+    # one declarative spec drives the model halves, the admission policy,
+    # the bucket ladder, AND the request stream below
+    spec = scenario("roo-lsr", {"serve.max_requests": 32,
+                                "serve.max_impressions": 192,
+                                "serve.cache_user_tower": True,
+                                "data.n_requests": 64,
+                                "data.hist_init_max": 40,
+                                "data.seed": 7})
+    print(f"scenario {spec.name} ({spec.content_hash()})")
+    engine = ScoringEngine.from_scenario(spec)
 
     # incoming requests = ROO samples without labels (same schema!)
-    events = list(EventSimulator(EventStreamConfig(
-        n_requests=64, hist_init_max=40, seed=7)).stream())
-    requests = RequestLevelJoiner().join(events)
+    requests = build_samples(spec)
     t0 = time.time()
-    scores = server.score_requests(requests)
+    scores = engine.score_requests(requests)
     dt = (time.time() - t0) * 1e3
     assert len(scores) == len(requests)
-    assert all(s.shape == (r.num_impressions,)
+    assert all(s.shape[0] == r.num_impressions
                for r, s in zip(requests, scores))
     n_cand = sum(len(s) for s in scores)
     print(f"scored {len(scores)} requests / {n_cand} candidates in {dt:.1f} ms "
           f"(aligned 1:1 with item_ids; user side computed ONCE per request)")
-    print(f"request 0: {np.round(scores[0], 3)}")
-    print(f"bucket shapes used: {sorted(server.stats.buckets.counts)}")
+    print(f"request 0, task 0: {np.round(scores[0][:, 0], 3)}")
+    print(f"bucket shapes used: {sorted(engine.stats.buckets.counts)}")
 
     # repeat traffic: the RO side is served from the user-tower cache
     t0 = time.time()
-    scores2 = server.score_requests(requests)
+    scores2 = engine.score_requests(requests)
     dt2 = (time.time() - t0) * 1e3
     np.testing.assert_allclose(scores2[0], scores[0], rtol=1e-5, atol=1e-5)
     print(f"repeat pass: {dt2:.1f} ms — cache hit rate "
-          f"{server.cache.stats.hit_rate:.0%}, "
-          f"{server.stats.n_full_cache_batches} batch(es) skipped the user tower")
+          f"{engine.cache.stats.hit_rate:.0%}, "
+          f"{engine.stats.n_full_cache_batches} batch(es) skipped the user tower")
 
     # --- online micro-batching: submit / poll / take --------------------------
-    eng = server.engine
-    tickets = [eng.submit(r) for r in requests[:5]]
-    eng.poll()                   # under size + deadline: nothing scored yet
-    eng.flush()                  # e.g. shutdown / test hook forces the flush
-    online = [eng.take(t) for t in tickets]
+    tickets = [engine.submit(r) for r in requests[:5]]
+    engine.poll()                # under size + deadline: nothing scored yet
+    engine.flush()               # e.g. shutdown / test hook forces the flush
+    online = [engine.take(t) for t in tickets]
     print(f"online path: {len(online)} requests scored in one micro-batch "
           f"({sum(len(s) for s in online)} candidates)")
 
     # --- retrieval serving: 1 user vs 1M candidates --------------------------
-    tt = rm.retrieval_config()
-    tparams = two_tower_init(rng, tt)
-    batch = next(ROOBatcher(BatcherConfig(b_ro=32, b_nro=192,
-                                          hist_len=64)).batches(requests))
-    u = user_tower(tparams, tt, batch)[0]                     # (d,)
+    ret = scenario("roo-retrieval")
+    bundle = build_model(ret, rng)
+    batch = next(ROOBatcher(build_batcher_cfg(spec)).batches(requests))
+    u = bundle.serve.user_fn(bundle.params, batch)[0]          # (d,)
     cand = jax.random.normal(rng, (1_000_000, u.shape[-1])) * 0.1
     t0 = time.time()
     top_scores, top_idx = retrieval_scoring(u, cand, k=10)

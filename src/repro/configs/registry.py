@@ -1,8 +1,10 @@
-"""Architecture registry: --arch <id> resolution for launch/dryrun/train."""
+"""Architecture registry: --arch <id> resolution for launch/dryrun/train,
+plus the declarative ScenarioSpec factory for every recsys arch
+(:func:`scenario` / :func:`all_scenarios` — see docs/CONFIG.md)."""
 from __future__ import annotations
 
 import importlib
-from typing import List
+from typing import List, Mapping, Optional
 
 _MODULES = {
     "starcoder2-15b": "repro.configs.starcoder2_15b",
@@ -39,3 +41,45 @@ def all_cells() -> List[tuple]:
         for s in mod.SHAPES:
             out.append((a, s))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Declarative scenarios (the recsys zoo as ScenarioSpecs)
+# ---------------------------------------------------------------------------
+
+# every trainable recsys arch; the factory defaults reproduce what
+# `launch/train.py --arch <id>` did before specs existed, so existing
+# invocations and CI commands behave identically
+SCENARIO_ARCHS = ("roo-lsr", "roo-esr", "roo-retrieval", "hstu-gr",
+                  "dien", "mind", "bert4rec", "dlrm-mlperf")
+
+
+def scenario(arch_id: str, overrides: Optional[Mapping] = None):
+    """The registered ScenarioSpec for ``arch_id``, optionally with dotted
+    ``--set``-style overrides (e.g. ``{"train.steps": 20}``) applied."""
+    from repro.scenario.spec import (BatcherSpec, DataSpec, ModelSpec,
+                                     ScenarioSpec)
+    if arch_id not in SCENARIO_ARCHS:
+        raise KeyError(f"no registered scenario {arch_id!r}; "
+                       f"known: {SCENARIO_ARCHS}")
+    model = ModelSpec(arch=arch_id)
+    batcher = BatcherSpec()
+    data = DataSpec(hist_init_max=48, n_requests=800)
+    if arch_id == "bert4rec":
+        model = ModelSpec(arch=arch_id, seq_len=65)
+    elif arch_id == "dien":
+        model = ModelSpec(arch=arch_id, seq_len=64)
+    elif arch_id == "dlrm-mlperf":
+        # MLPerf-shaped at reduced scale; field-dict batches come from the
+        # synthetic generator, not the ROO event stream
+        model = ModelSpec(arch=arch_id, n_items=0, embed_dim=16)
+        batcher = BatcherSpec(b_ro=8, b_nro=32)
+        data = DataSpec(source="synthetic")
+    spec = ScenarioSpec(name=arch_id, model=model, batcher=batcher,
+                        data=data).validate()
+    return spec.with_overrides(overrides) if overrides else spec
+
+
+def all_scenarios() -> List:
+    """Every registered recsys scenario (CI validates + smoke-trains each)."""
+    return [scenario(a) for a in SCENARIO_ARCHS]

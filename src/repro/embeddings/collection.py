@@ -38,7 +38,6 @@ optimizer update. Override per call (``dedup=True/False``), per process
 from __future__ import annotations
 
 import dataclasses
-import os
 from typing import Dict, Optional, Tuple, Union
 
 import jax
@@ -47,26 +46,28 @@ import jax.numpy as jnp
 from repro.data.jagged import JaggedTensor, KeyedJagged
 from repro.embeddings.bag import bag_pool, bag_pool_dense
 from repro.embeddings.sparse import GatheredTable
+from repro.scenario.knobs import UNSET, Knob
 
 # tables this tall with this many ids per lookup dedup by default
 DEDUP_MIN_VOCAB = 4096
 DEDUP_MIN_IDS = 64
 
-_dedup_policy: Optional[str] = None     # None -> env or "auto"
+# policy resolves through the shared ladder (arg > process default set by
+# a CLI flag / scenario spec > REPRO_EMB_DEDUP env var > "auto")
+DEDUP_KNOB = Knob("emb_dedup", "REPRO_EMB_DEDUP",
+                  choices=("always", "never", "auto"), kind="policy",
+                  auto=lambda: "auto")
 
 
 def set_dedup_policy(policy: Optional[str]) -> None:
     """Process-wide dedup policy: "always" | "never" | "auto" | None."""
-    global _dedup_policy
-    if policy is not None and policy not in ("always", "never", "auto"):
-        raise ValueError(f"unknown dedup policy {policy!r}")
-    _dedup_policy = policy
+    DEDUP_KNOB.set_default(UNSET if policy is None else policy)
 
 
 def _want_dedup(vocab: int, n_ids: int, dedup: Optional[bool]) -> bool:
     if dedup is not None:
         return dedup
-    policy = _dedup_policy or os.environ.get("REPRO_EMB_DEDUP") or "auto"
+    policy = DEDUP_KNOB.resolve()
     if policy == "always":
         return True
     if policy == "never":
@@ -81,7 +82,7 @@ def _dedup_forced(dedup: Optional[bool]) -> bool:
     streams one DMA per slot and cannot honor it."""
     if dedup is not None:
         return dedup
-    return (_dedup_policy or os.environ.get("REPRO_EMB_DEDUP")) == "always"
+    return DEDUP_KNOB.resolve() == "always"
 
 
 # ---------------------------------------------------------------------------

@@ -13,18 +13,18 @@ HSTU backends (see docs/KERNELS.md for the full table):
   jnp-dense        — the naive (S, S)-materializing oracle (kernels.ref);
                      ground truth for parity tests only
 
-Selection precedence, highest first: explicit ``backend=`` argument >
-:func:`use_backend` (scoped, thread-local) > :func:`set_default_backend`
-(process-wide, e.g. the --attn-backend CLI flag) > the
-``REPRO_HSTU_BACKEND`` env var > auto (``pallas`` on TPU, ``jnp-chunked``
-elsewhere). Explicitly configured knobs beat the ambient env var so an
-exported debug override cannot silently win over a CLI flag or a pinned
-``ServeConfig``. Backend resolution happens at trace time, so a jit'd
-train step bakes in whichever backend was active when it first ran.
+Both backend families resolve through the shared precedence ladder in
+:mod:`repro.scenario.knobs` (explicit ``backend=`` argument >
+:func:`use_backend` scoped override > :func:`set_default_backend` /
+scenario-spec default > ``REPRO_HSTU_BACKEND`` env var > auto: ``pallas``
+on TPU, the jnp fallback elsewhere). Explicitly configured knobs beat the
+ambient env var so an exported debug override cannot silently win over a
+CLI flag, a pinned ``ServeConfig``, or a scenario spec. Backend resolution
+happens at trace time, so a jit'd train step bakes in whichever backend
+was active when it first ran.
 
-Embedding-bag backends (docs/EMBEDDINGS.md) follow the same precedence with
-their own knob set (``REPRO_EMB_BACKEND`` env var, ``set_default_emb_backend``,
-``use_emb_backend``):
+Embedding-bag backends (docs/EMBEDDINGS.md) have their own knob
+(``REPRO_EMB_BACKEND``, ``set_default_emb_backend``, ``use_emb_backend``):
 
   pallas           — fused Pallas TPU kernel (kernels/embedding_bag.py),
                      forward + COO-row backward (``jax.custom_vjp``)
@@ -33,113 +33,70 @@ their own knob set (``REPRO_EMB_BACKEND`` env var, ``set_default_emb_backend``,
 """
 from __future__ import annotations
 
-import contextlib
-import contextvars
-import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.masks import MaskSpec
+from repro.scenario.knobs import UNSET, Knob
 
 BACKENDS = ("pallas", "pallas-interpret", "jnp-chunked", "jnp-dense")
 ENV_VAR = "REPRO_HSTU_BACKEND"
 
-_default_backend: Optional[str] = None
-# scoped override (use_backend): a ContextVar so concurrent servers/threads
-# tracing at the same time cannot leak their backend into each other
-_scoped_backend: contextvars.ContextVar = contextvars.ContextVar(
-    "repro_hstu_scoped_backend", default=None)
-
-
-def _validate(backend: str) -> str:
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown HSTU backend {backend!r}; "
-                         f"expected one of {BACKENDS}")
-    return backend
-
-
-def set_default_backend(backend: Optional[str]) -> None:
-    """Process-wide default (used by launch/train.py --attn-backend)."""
-    global _default_backend
-    _default_backend = _validate(backend) if backend is not None else None
-
-
-def get_default_backend() -> Optional[str]:
-    return _default_backend
-
-
-@contextlib.contextmanager
-def use_backend(backend: Optional[str]):
-    """Scoped backend override (thread-local); ``None`` is a no-op."""
-    if backend is None:
-        yield
-        return
-    token = _scoped_backend.set(_validate(backend))
-    try:
-        yield
-    finally:
-        _scoped_backend.reset(token)
-
-
-def resolve_backend(backend: Optional[str] = None) -> str:
-    for cand in (backend, _scoped_backend.get(), _default_backend,
-                 os.environ.get(ENV_VAR)):
-        if cand:
-            return _validate(cand)
-    return "pallas" if jax.default_backend() == "tpu" else "jnp-chunked"
-
-
-# ---------------------------------------------------------------------------
-# Embedding-bag backend knobs (same precedence ladder as HSTU, own namespace)
-# ---------------------------------------------------------------------------
-
 EMB_BACKENDS = ("pallas", "pallas-interpret", "jnp")
 EMB_ENV_VAR = "REPRO_EMB_BACKEND"
 
-_default_emb_backend: Optional[str] = None
-_scoped_emb_backend: contextvars.ContextVar = contextvars.ContextVar(
-    "repro_emb_scoped_backend", default=None)
+ATTN_KNOB = Knob(
+    "attn_backend", ENV_VAR, choices=BACKENDS, kind="backend",
+    auto=lambda: "pallas" if jax.default_backend() == "tpu"
+    else "jnp-chunked")
+
+EMB_KNOB = Knob(
+    "emb_backend", EMB_ENV_VAR, choices=EMB_BACKENDS, kind="backend",
+    auto=lambda: "pallas" if jax.default_backend() == "tpu" else "jnp")
 
 
-def _validate_emb(backend: str) -> str:
-    if backend not in EMB_BACKENDS:
-        raise ValueError(f"unknown embedding-bag backend {backend!r}; "
-                         f"expected one of {EMB_BACKENDS}")
-    return backend
+# thin compatibility wrappers over the shared ladder; ``None`` means
+# "unset" on this API (clear the default / skip the rung), which the
+# knob layer spells UNSET
+
+def set_default_backend(backend: Optional[str]) -> None:
+    """Process-wide default (used by launch/train.py --attn-backend)."""
+    ATTN_KNOB.set_default(UNSET if backend is None else backend)
+
+
+def get_default_backend() -> Optional[str]:
+    return ATTN_KNOB.get_default()
+
+
+def use_backend(backend: Optional[str]):
+    """Scoped backend override (ContextVar, so concurrent servers/threads
+    tracing at the same time cannot leak into each other); ``None`` is a
+    no-op."""
+    return ATTN_KNOB.scoped(UNSET if backend is None else backend)
+
+
+def resolve_backend(backend: Optional[str] = None) -> str:
+    return ATTN_KNOB.resolve(UNSET if backend is None else backend)
 
 
 def set_default_emb_backend(backend: Optional[str]) -> None:
     """Process-wide default (used by launch/train.py --emb-backend)."""
-    global _default_emb_backend
-    _default_emb_backend = (_validate_emb(backend)
-                            if backend is not None else None)
+    EMB_KNOB.set_default(UNSET if backend is None else backend)
 
 
 def get_default_emb_backend() -> Optional[str]:
-    return _default_emb_backend
+    return EMB_KNOB.get_default()
 
 
-@contextlib.contextmanager
 def use_emb_backend(backend: Optional[str]):
     """Scoped embedding-bag backend override; ``None`` is a no-op."""
-    if backend is None:
-        yield
-        return
-    token = _scoped_emb_backend.set(_validate_emb(backend))
-    try:
-        yield
-    finally:
-        _scoped_emb_backend.reset(token)
+    return EMB_KNOB.scoped(UNSET if backend is None else backend)
 
 
 def resolve_emb_backend(backend: Optional[str] = None) -> str:
-    for cand in (backend, _scoped_emb_backend.get(), _default_emb_backend,
-                 os.environ.get(EMB_ENV_VAR)):
-        if cand:
-            return _validate_emb(cand)
-    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return EMB_KNOB.resolve(UNSET if backend is None else backend)
 
 
 def hstu_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

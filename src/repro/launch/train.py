@@ -1,23 +1,29 @@
 """Training launcher: ``--arch <id>`` selects any registered architecture.
 
-For the ROO recsys models (roo-lsr / roo-esr / roo-retrieval / hstu-gr and
-the assigned recsys archs at reduced scale) this runs REAL training on the
-local host. For LM/GNN archs it trains the reduced smoke config — the full
-configs are exercised via launch/dryrun.py (ShapeDtypeStruct only).
+Recsys archs (roo-lsr / roo-esr / roo-retrieval / hstu-gr / dien / mind /
+bert4rec / dlrm-mlperf) are **scenario-driven**: the registry's
+ScenarioSpec factory (configs/registry.py) supplies the declarative
+config, ``--config spec.json`` replaces it with a serialized spec,
+``--set section.field=value`` applies dotted overrides, and every legacy
+flag (--steps, --b-ro, --data, ...) still works — flags are translated
+into the same overrides, so existing invocations and CI commands behave
+identically. Construction happens in ``repro.scenario.build``, the SAME
+code path tests and CI smoke runs use, which is what makes a spec-driven
+run bit-identical to its flag-driven equivalent
+(tests/test_scenario.py). See docs/CONFIG.md.
 
-Recsys archs can train from the disk-backed request-log pipeline
-(``--data disk``): events -> watermark online join -> on-disk ROO shards ->
-async prefetching loader, with the (shard, offset) cursor checkpointed next
-to the model state so a killed run resumes bit-identically.
+LM/GNN archs train their reduced smoke config — the full configs are
+exercised via launch/dryrun.py (ShapeDtypeStruct only).
 
-SPMD: ``--mesh DATAxMODEL`` runs the recsys archs under a real device mesh —
-params/optimizer FSDP+TP sharded, embedding lookups via explicit psum
-collectives, batches split over the data axis by the loader. On CPU,
-simulate devices with XLA_FORCE_HOST_PLATFORM_DEVICE_COUNT (read below,
-before jax initializes). See docs/DISTRIBUTED.md.
+SPMD: ``--mesh DATAxMODEL`` (or ``--set train.mesh=2x4``) runs the recsys
+archs under a real device mesh. On CPU, simulate devices with
+XLA_FORCE_HOST_PLATFORM_DEVICE_COUNT (read below, before jax
+initializes). See docs/DISTRIBUTED.md.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch roo-lsr --steps 200
+  PYTHONPATH=src python -m repro.launch.train --arch roo-lsr \
+      --config myrun.json --set train.steps=500 --set knobs.emb_dedup=always
   PYTHONPATH=src python -m repro.launch.train --arch roo-lsr --steps 200 \
       --data disk --shard-dir /tmp/roo_shards --ckpt-dir /tmp/roo_ckpt
   PYTHONPATH=src XLA_FORCE_HOST_PLATFORM_DEVICE_COUNT=8 \
@@ -28,8 +34,8 @@ Examples:
 from __future__ import annotations
 
 import argparse
-import os
 import time
+from typing import Optional
 
 # must run before jax touches the backend: the CI/test convention for CPU
 # device simulation is the env var; translate it into the XLA flag
@@ -40,105 +46,31 @@ apply_host_device_env()
 import jax
 import jax.numpy as jnp
 
-
-def _ne_metrics(logits_fn):
-    """NE of a model's primary binary head, surfaced in Trainer logs."""
-    from repro.train.metrics import make_ne_metrics
-    return make_ne_metrics(logits_fn)
+LM_ARCHS = ("starcoder2-15b", "deepseek-coder-33b", "phi3-medium-14b",
+            "qwen3-moe-235b-a22b", "granite-moe-3b-a800m")
 
 
-def _recsys_loss(arch: str, rng, plan=None, sparse: bool = False):
-    """-> (params, loss_fn, value_and_grad_fn | None, metrics_fn | None).
-
-    With ``sparse=True`` the archs that declare their per-table ids train
-    through ``make_sparse_value_and_grad``: COO row grads + touched-rows-
-    only row-wise Adagrad (docs/EMBEDDINGS.md).
-    """
-    from repro.configs import roo_models as rm
-    from repro.embeddings.sparse import make_sparse_value_and_grad
-
-    def sparse_vag(loss_fn, table_ids_fn):
-        return (make_sparse_value_and_grad(loss_fn, table_ids_fn)
-                if sparse else None)
-
-    if arch in ("roo-lsr",):
-        from repro.models.lsr import (lsr_init, lsr_logits_roo, lsr_loss,
-                                      lsr_table_ids)
-        cfg = rm.lsr_config("userarch_hstu")
-        loss = lambda p, b, r: lsr_loss(p, cfg, b, plan=plan)
-        return (lsr_init(rng, cfg), loss,
-                sparse_vag(loss, lambda b: lsr_table_ids(cfg, b)),
-                _ne_metrics(lambda p, b: (
-                    lsr_logits_roo(p, cfg, b, plan=plan)[:, 0],
-                    b.labels[:, 0], b.impression_mask())))
-    if arch == "roo-esr":
-        from repro.models.two_tower import (esr_logits_roo, esr_loss_roo,
-                                            two_tower_init,
-                                            two_tower_table_ids)
-        cfg = rm.esr_config()
-        loss = lambda p, b, r: esr_loss_roo(p, cfg, b)
-        return (two_tower_init(rng, cfg), loss,
-                sparse_vag(loss, lambda b: two_tower_table_ids(cfg, b)),
-                _ne_metrics(lambda p, b: (esr_logits_roo(p, cfg, b),
-                                          b.labels[:, 0],
-                                          b.impression_mask())))
-    if arch == "roo-retrieval":
-        from repro.models.two_tower import (retrieval_loss_roo,
-                                            two_tower_init,
-                                            two_tower_table_ids)
-        cfg = rm.retrieval_config()
-        loss = lambda p, b, r: retrieval_loss_roo(p, cfg, b)
-        return (two_tower_init(rng, cfg), loss,
-                sparse_vag(loss, lambda b: two_tower_table_ids(cfg, b)),
-                None)
-    if arch == "hstu-gr":
-        from repro.models.gr import (gr_init, gr_ranking_logits,
-                                     gr_ranking_loss, gr_table_ids)
-        cfg = rm.gr_config(hist_len=64)
-        loss = lambda p, b, r: gr_ranking_loss(p, cfg, b, plan=plan)
-        return (gr_init(rng, cfg), loss,
-                sparse_vag(loss, lambda b: gr_table_ids(cfg, b)),
-                _ne_metrics(lambda p, b: (
-                    gr_ranking_logits(p, cfg, b, plan=plan)[:, 0],
-                    b.labels[:, 0], b.impression_mask())))
-    if arch == "mind":
-        from repro.models.mind import (MINDConfig, mind_init, mind_loss,
-                                       mind_table_ids)
-        cfg = MINDConfig(n_items=50000)
-        loss = lambda p, b, r: mind_loss(p, cfg, b)
-        return (mind_init(rng, cfg), loss,
-                sparse_vag(loss, lambda b: mind_table_ids(cfg, b)), None)
-    if arch == "bert4rec":
-        from repro.models.bert4rec import (BERT4RecConfig, bert4rec_init,
-                                           bert4rec_loss)
-        if sparse:
-            raise SystemExit("bert4rec's cloze head is a full softmax over "
-                             "item_emb — dense by construction; drop "
-                             "--sparse-emb")
-        cfg = BERT4RecConfig(n_items=50000, seq_len=65)
-        return (bert4rec_init(rng, cfg),
-                lambda p, b, r: bert4rec_loss(p, cfg, b, r), None, None)
-    if arch == "dien":
-        from repro.models.din_dien import (DIENConfig, dien_init,
-                                           dien_logits_roo, dien_loss,
-                                           dien_table_ids)
-        cfg = DIENConfig(n_items=50000, seq_len=64)
-        loss = lambda p, b, r: dien_loss(p, cfg, b)
-        return (dien_init(rng, cfg), loss,
-                sparse_vag(loss, lambda b: dien_table_ids(cfg, b)),
-                _ne_metrics(lambda p, b: (dien_logits_roo(p, cfg, b),
-                                          b.labels[:, 0],
-                                          b.impression_mask())))
-    raise KeyError(arch)
-
-
-def main() -> None:
+def _parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--arch", default=None,
+                    help="registered arch id; optional when --config "
+                         "supplies the scenario")
+    # scenario surface
+    ap.add_argument("--config", default=None, metavar="SPEC.json",
+                    help="load a serialized ScenarioSpec instead of the "
+                         "registry factory for --arch")
+    ap.add_argument("--set", action="append", default=[], metavar="K=V",
+                    dest="sets",
+                    help="dotted spec override, e.g. train.steps=500 or "
+                         "knobs.attn_backend=jnp-chunked (repeatable)")
+    ap.add_argument("--dump-config", default=None, metavar="OUT.json",
+                    help="write the resolved spec as JSON and exit "
+                         "(the artifact --config replays)")
+    # legacy flags — kept working as spec overrides (None = not passed)
+    ap.add_argument("--steps", type=int, default=None)
     ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--b-ro", type=int, default=32)
-    ap.add_argument("--b-nro", type=int, default=192)
+    ap.add_argument("--b-ro", type=int, default=None)
+    ap.add_argument("--b-nro", type=int, default=None)
     ap.add_argument("--attn-backend", default=None,
                     choices=("pallas", "pallas-interpret", "jnp-chunked",
                              "jnp-dense"),
@@ -157,26 +89,26 @@ def main() -> None:
                     choices=("auto", "always", "never"),
                     help="request-level id dedup before embedding lookups "
                          "(default auto: tables >= 4096 rows)")
-    ap.add_argument("--data", default="memory", choices=("memory", "disk"),
+    ap.add_argument("--data", default=None, choices=("memory", "disk"),
                     help="recsys data path: in-memory batches (default) or "
                          "the disk-backed shard pipeline with prefetch + "
                          "cursor resume")
     ap.add_argument("--shard-dir", default="/tmp/roo_shards",
                     help="shard directory for --data disk (reused if a "
                          "manifest already exists)")
-    ap.add_argument("--requests-per-shard", type=int, default=256)
+    ap.add_argument("--requests-per-shard", type=int, default=None)
     ap.add_argument("--strict-shards", action="store_true",
                     help="raise on corrupt shards instead of quarantining "
                          "them (data-validation runs)")
-    ap.add_argument("--halt-after-skips", type=int, default=0,
+    ap.add_argument("--halt-after-skips", type=int, default=None,
                     help="halt after N consecutive non-finite training "
                          "steps (0 = keep skipping silently)")
     ap.add_argument("--no-prefetch", action="store_true",
                     help="disable the background prefetch thread "
                          "(synchronous shard reads; benchmarking aid)")
-    ap.add_argument("--label-wait", type=float, default=600.0,
+    ap.add_argument("--label-wait", type=float, default=None,
                     help="online-join label wait window (seconds)")
-    ap.add_argument("--late-fraction", type=float, default=0.0,
+    ap.add_argument("--late-fraction", type=float, default=None,
                     help="fraction of conversions given a heavy-tail delay")
     ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
                     help="run SPMD over a device mesh, e.g. 2x4 (or "
@@ -184,206 +116,147 @@ def main() -> None:
                          "XLA_FORCE_HOST_PLATFORM_DEVICE_COUNT to the "
                          "device product. roo-lsr / hstu-gr only (plan-"
                          "routed losses).")
-    args = ap.parse_args()
-    from repro.reliability import faults as _faults
-    _plan = _faults.active_plan()
-    if _plan is not None:
-        # fault injection is never silent: a chaos run announces itself
-        print(f"[reliability] fault injection ACTIVE: {_plan.to_env()}")
-    if args.attn_backend:
-        from repro.kernels.dispatch import set_default_backend
-        set_default_backend(args.attn_backend)
-    if args.emb_backend:
-        from repro.kernels.dispatch import set_default_emb_backend
-        set_default_emb_backend(args.emb_backend)
-    if args.emb_dedup:
-        from repro.embeddings.collection import set_dedup_policy
-        set_dedup_policy(args.emb_dedup)
-    rng = jax.random.PRNGKey(0)
+    return ap
 
-    plan = None
-    if args.mesh:
-        # only archs whose loss threads the plan into sharded lookups may
-        # run under a mesh: sharding the state of a plan-blind loss would
-        # silently re-gather every row-sharded table each step
-        plan_archs = ("roo-lsr", "hstu-gr")
-        if args.arch not in plan_archs:
-            raise SystemExit(f"--mesh supports {', '.join(plan_archs)} (their "
-                             f"losses route lookups through the sharding "
-                             f"plan); {args.arch} would train slower sharded "
-                             f"than replicated")
-        from repro.distributed.sharding import plan_for_mesh
-        from repro.launch.mesh import make_mesh_from_spec
-        mesh = make_mesh_from_spec(args.mesh)
-        plan = plan_for_mesh(mesh)
-        print(f"[spmd] mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} "
-              f"over {mesh.devices.size} device(s)")
 
-    from repro.train.loop import Trainer, TrainLoopConfig
-    from repro.train.optim import (adam, default_is_embedding, make_mixed,
-                                   rowwise_adagrad)
+def _flag_overrides(args) -> dict:
+    """Legacy flags -> dotted spec overrides (only flags actually passed)."""
+    mapping = {
+        "train.steps": args.steps,
+        "batcher.b_ro": args.b_ro,
+        "batcher.b_nro": args.b_nro,
+        "knobs.attn_backend": args.attn_backend,
+        "knobs.emb_backend": args.emb_backend,
+        "knobs.emb_dedup": args.emb_dedup,
+        "data.source": args.data,
+        "data.requests_per_shard": args.requests_per_shard,
+        "data.label_wait_s": args.label_wait,
+        "data.late_fraction": args.late_fraction,
+        "train.halt_after_skips": args.halt_after_skips,
+        "train.mesh": args.mesh,
+    }
+    out = {k: v for k, v in mapping.items() if v is not None}
+    if args.sparse_emb:
+        out["train.sparse_emb"] = True
+    if args.strict_shards:
+        out["data.strict_shards"] = True
+    if args.no_prefetch:
+        out["data.prefetch"] = False
+    return out
 
-    lm_archs = ("starcoder2-15b", "deepseek-coder-33b", "phi3-medium-14b",
-                "qwen3-moe-235b-a22b", "granite-moe-3b-a800m")
-    if args.arch in lm_archs:
-        from repro.configs.registry import get_arch
-        from repro.models.lm.transformer import lm_init, lm_loss
-        cfg = get_arch(args.arch).smoke_config()
-        params = lm_init(rng, cfg)
 
-        def batch_iter(start):
-            def gen():
-                i = start
-                while True:
-                    r = jax.random.fold_in(rng, i)
-                    toks = jax.random.randint(r, (4, 64), 0, cfg.vocab)
-                    yield {"tokens": toks}
-                    i += 1
-            return gen()
-
-        trainer = Trainer(
-            lambda p, b, r: lm_loss(p, cfg, b["tokens"], b["tokens"]),
-            adam(3e-4),
-            TrainLoopConfig(total_steps=args.steps, log_every=10,
-                            ckpt_dir=args.ckpt_dir, ckpt_every=50),
-            lambda: params)
-        state = trainer.run(batch_iter, rng)
-        print(f"[{args.arch}-smoke] final loss "
-              f"{trainer.history[-1]['loss']:.4f} at step "
-              f"{int(state['step'])}")
-        return
-
-    if args.arch == "mace":
-        import numpy as np
-        from repro.models.gnn.mace import MACEConfig, mace_forward, mace_init
-        cfg = MACEConfig(channels=32, n_feat_in=8)
-        params = mace_init(rng, cfg)
-        r = np.random.RandomState(0)
-        n, e, g = 64, 256, 8
-        batch = dict(
-            node_feat=jnp.asarray(r.normal(size=(n, 8)).astype(np.float32)),
-            positions=jnp.asarray(r.normal(size=(n, 3)).astype(np.float32)),
-            edge_index=jnp.asarray(r.randint(0, n, (e, 2)).astype(np.int32)),
-            edge_mask=jnp.ones((e,), bool),
-            graph_ids=jnp.asarray(np.sort(r.randint(0, g, n)).astype(np.int32)))
-        targets = jnp.asarray(r.normal(size=(g,)).astype(np.float32))
-
-        def loss_fn(p, b, _):
-            out = mace_forward(p, cfg, **b, n_graphs=g)
-            return jnp.mean((out["energy"][:, 0] - targets) ** 2)
-
-        trainer = Trainer(loss_fn, adam(1e-3),
-                          TrainLoopConfig(total_steps=args.steps, log_every=10,
-                                          ckpt_dir=args.ckpt_dir),
-                          lambda: params)
-        state = trainer.run(lambda s: iter(lambda: batch, None), rng)
-        print(f"[mace-smoke] final loss {trainer.history[-1]['loss']:.5f}")
-        return
-
-    # recsys: real data pipeline + real training
-    from repro.data.batcher import BatcherConfig
-    from repro.data.events import EventSimulator, EventStreamConfig
-    if args.sparse_emb and plan is not None:
-        # the GatheredTable proxy gathers rows locally, bypassing the psum
-        # lookups a row-sharded table needs — pick one regime per run
-        raise SystemExit("--sparse-emb and --mesh are mutually exclusive: "
-                         "sparse row grads assume locally-addressable "
-                         "tables (see docs/EMBEDDINGS.md)")
-    params, loss_fn, vag_fn, metrics_fn = _recsys_loss(
-        args.arch, rng, plan=plan, sparse=args.sparse_emb)
-    if args.sparse_emb and vag_fn is None:
-        raise SystemExit(f"{args.arch} has no table_ids declaration; "
-                         f"--sparse-emb unsupported")
-    n_data_shards = 1
-    if plan is not None:
-        from repro.distributed.spmd import data_shard_count
-        n_data_shards = data_shard_count(plan)
-        if args.b_ro % n_data_shards or args.b_nro % n_data_shards:
-            raise SystemExit(f"--b-ro/--b-nro must be divisible by the "
-                             f"mesh's {n_data_shards} data shard(s)")
-    batcher_cfg = BatcherConfig(b_ro=args.b_ro, b_nro=args.b_nro, hist_len=64,
-                                n_shards=n_data_shards)
-    stream_cfg = EventStreamConfig(n_requests=800, n_items=50000,
-                                   hist_init_max=48, seed=0,
-                                   late_fraction=args.late_fraction)
-
-    opt = make_mixed(adam(1e-3), rowwise_adagrad(0.05), default_is_embedding)
-    trainer = Trainer(loss_fn, opt,
-                      TrainLoopConfig(total_steps=args.steps, log_every=10,
-                                      ckpt_dir=args.ckpt_dir, ckpt_every=100,
-                                      halt_after_skips=args.halt_after_skips),
-                      lambda: params, plan=plan,
-                      value_and_grad_fn=vag_fn, metrics_fn=metrics_fn)
-    t0 = time.time()
-    if args.data == "disk":
-        from repro.pipeline import (OnlineJoinConfig, WatermarkJoiner,
-                                    load_manifest, make_data_source,
-                                    write_samples)
-        import dataclasses as _dc
-        provenance = {"stream": _dc.asdict(stream_cfg),
-                      "label_wait_s": args.label_wait,
-                      "requests_per_shard": args.requests_per_shard}
-        try:
-            manifest = load_manifest(args.shard_dir)
-            if manifest.provenance != provenance:
-                raise SystemExit(
-                    f"[pipeline] {args.shard_dir} holds shards built with "
-                    f"different settings:\n  stored:    "
-                    f"{manifest.provenance}\n  requested: {provenance}\n"
-                    f"Pick another --shard-dir or delete the old one.")
-            print(f"[pipeline] reusing {len(manifest.shards)} shard(s) in "
-                  f"{args.shard_dir}")
-        except FileNotFoundError:
-            joiner = WatermarkJoiner(OnlineJoinConfig(
-                label_wait_s=args.label_wait))
-            samples = joiner.join(EventSimulator(stream_cfg).stream())
-            manifest = write_samples(args.shard_dir, samples,
-                                     requests_per_shard=args.requests_per_shard,
-                                     provenance=provenance)
-            st = joiner.stats
-            print(f"[pipeline] joined {st.requests_emitted} requests "
-                  f"(label completeness {st.label_completeness:.3f}, "
-                  f"mean close lag {st.mean_close_lag_s:.0f}s) -> "
-                  f"{len(manifest.shards)} shard(s), "
-                  f"{manifest.n_bytes / 1e6:.2f} MB on disk")
-        cursor_dir = os.path.join(args.ckpt_dir or args.shard_dir, "cursors")
-        from repro.distributed.spmd import make_batch_sharding_fn
-        source = make_data_source(args.shard_dir, batcher_cfg, cursor_dir,
-                                  prefetch=not args.no_prefetch,
-                                  sharding=make_batch_sharding_fn(plan),
-                                  strict=args.strict_shards)
-        with source:                       # join producer threads on exit
-            state = trainer.run(source.batch_iter_fn, rng,
-                                on_checkpoint=source.on_checkpoint)
-        ds_stats = source.loader.dataset.stats
-        if ds_stats.shards_quarantined:
-            print(f"[reliability] {ds_stats.shards_quarantined} corrupt "
-                  f"shard(s) quarantined: {ds_stats.quarantined_files}")
-        if trainer.skipped_steps:
-            print(f"[reliability] {trainer.skipped_steps} non-finite "
-                  f"step(s) skipped by the guard")
+def resolve_spec(args):
+    """--config / registry factory + --set + legacy flags -> ScenarioSpec."""
+    from repro.configs.registry import scenario
+    from repro.scenario.spec import ScenarioSpec, parse_set_args
+    if args.config:
+        spec = ScenarioSpec.load(args.config)
+        if args.arch and args.arch != spec.model.arch:
+            raise SystemExit(f"--arch {args.arch} contradicts --config "
+                             f"(model.arch={spec.model.arch}); drop one")
     else:
-        from repro.core.joiner import RequestLevelJoiner
-        from repro.data.batcher import ROOBatcher
-        samples = RequestLevelJoiner().join(
-            list(EventSimulator(stream_cfg).stream()))
-        batches = list(ROOBatcher(batcher_cfg).batches(samples))
+        spec = scenario(args.arch)
+    overrides = _flag_overrides(args)
+    overrides.update(parse_set_args(args.sets))   # --set beats legacy flags
+    return spec.with_overrides(overrides) if overrides else spec
 
-        def batch_iter(start):
-            def gen():
-                i = start
-                while True:
-                    yield batches[i % len(batches)]
-                    i += 1
-            return gen()
 
-        state = trainer.run(batch_iter, rng)
+def _train_lm(arch: str, steps: int, ckpt_dir: Optional[str], rng) -> None:
+    from repro.configs.registry import get_arch
+    from repro.models.lm.transformer import lm_init, lm_loss
+    from repro.train.loop import Trainer, TrainLoopConfig
+    from repro.train.optim import adam
+    cfg = get_arch(arch).smoke_config()
+    params = lm_init(rng, cfg)
+
+    def batch_iter(start):
+        def gen():
+            i = start
+            while True:
+                r = jax.random.fold_in(rng, i)
+                toks = jax.random.randint(r, (4, 64), 0, cfg.vocab)
+                yield {"tokens": toks}
+                i += 1
+        return gen()
+
+    trainer = Trainer(
+        lambda p, b, r: lm_loss(p, cfg, b["tokens"], b["tokens"]),
+        adam(3e-4),
+        TrainLoopConfig(total_steps=steps, log_every=10,
+                        ckpt_dir=ckpt_dir, ckpt_every=50),
+        lambda: params)
+    state = trainer.run(batch_iter, rng)
+    print(f"[{arch}-smoke] final loss "
+          f"{trainer.history[-1]['loss']:.4f} at step "
+          f"{int(state['step'])}")
+
+
+def _train_mace(steps: int, ckpt_dir: Optional[str], rng) -> None:
+    import numpy as np
+    from repro.models.gnn.mace import MACEConfig, mace_forward, mace_init
+    from repro.train.loop import Trainer, TrainLoopConfig
+    from repro.train.optim import adam
+    cfg = MACEConfig(channels=32, n_feat_in=8)
+    params = mace_init(rng, cfg)
+    r = np.random.RandomState(0)
+    n, e, g = 64, 256, 8
+    batch = dict(
+        node_feat=jnp.asarray(r.normal(size=(n, 8)).astype(np.float32)),
+        positions=jnp.asarray(r.normal(size=(n, 3)).astype(np.float32)),
+        edge_index=jnp.asarray(r.randint(0, n, (e, 2)).astype(np.int32)),
+        edge_mask=jnp.ones((e,), bool),
+        graph_ids=jnp.asarray(np.sort(r.randint(0, g, n)).astype(np.int32)))
+    targets = jnp.asarray(r.normal(size=(g,)).astype(np.float32))
+
+    def loss_fn(p, b, _):
+        out = mace_forward(p, cfg, **b, n_graphs=g)
+        return jnp.mean((out["energy"][:, 0] - targets) ** 2)
+
+    trainer = Trainer(loss_fn, adam(1e-3),
+                      TrainLoopConfig(total_steps=steps, log_every=10,
+                                      ckpt_dir=ckpt_dir),
+                      lambda: params)
+    trainer.run(lambda s: iter(lambda: batch, None), rng)
+    print(f"[mace-smoke] final loss {trainer.history[-1]['loss']:.5f}")
+
+
+def main(argv=None):
+    args = _parser().parse_args(argv)
+    if not args.arch and not args.config:
+        raise SystemExit("pass --arch <id> or --config spec.json")
+
+    # LM/GNN smoke paths predate the scenario surface and keep their
+    # direct construction (they are not recsys scenarios)
+    if args.arch in LM_ARCHS:
+        _train_lm(args.arch, args.steps or 100, args.ckpt_dir,
+                  jax.random.PRNGKey(0))
+        return None
+    if args.arch == "mace":
+        _train_mace(args.steps or 100, args.ckpt_dir, jax.random.PRNGKey(0))
+        return None
+
+    from repro.scenario.build import train_from_scenario
+    from repro.scenario.spec import ScenarioValidationError
+    try:
+        spec = resolve_spec(args)
+        if args.dump_config:
+            spec.save(args.dump_config)
+            print(f"[scenario] {spec.name} ({spec.content_hash()}) -> "
+                  f"{args.dump_config}")
+            return None
+        t0 = time.time()
+        trainer, state = train_from_scenario(
+            spec, ckpt_dir=args.ckpt_dir, shard_dir=args.shard_dir)
+    except ScenarioValidationError as e:
+        raise SystemExit(str(e))
     dt = time.time() - t0
     # history only fills every log_every steps; short runs end with none
     last = trainer.history[-1] if trainer.history else {}
     tail = f"; final loss {last['loss']:.4f}" if "loss" in last else ""
     tail += f"; NE {last['ne']:.4f}" if "ne" in last else ""
-    print(f"[{args.arch}] {int(state['step'])} steps in {dt:.1f}s{tail}")
+    print(f"[{spec.model.arch}] {int(state['step'])} steps in {dt:.1f}s"
+          f"{tail} (scenario {spec.name} {spec.content_hash()})")
+    return trainer, state
 
 
 if __name__ == "__main__":

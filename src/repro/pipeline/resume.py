@@ -90,12 +90,18 @@ class CursorStore:
 
 
 class PipelineDataSource:
-    """Adapts a PrefetchLoader to Trainer.run's fast-forward contract."""
+    """Adapts a PrefetchLoader to Trainer.run's fast-forward contract.
 
-    def __init__(self, loader: PrefetchLoader, store: CursorStore):
+    ``fingerprint`` overrides what cursors are keyed on — scenario-driven
+    runs pass ``scenario.build.cursor_fingerprint(spec, manifest)`` so the
+    cursor is provably tied to the spec's data/batcher sections; the
+    default is the legacy (BatcherConfig, manifest) hash."""
+
+    def __init__(self, loader: PrefetchLoader, store: CursorStore,
+                 fingerprint: Optional[str] = None):
         self.loader = loader
         self.store = store
-        self._fingerprint = dataset_fingerprint(loader.dataset)
+        self._fingerprint = fingerprint or dataset_fingerprint(loader.dataset)
         self._pending: Dict[int, Cursor] = {}      # step -> resume cursor
 
     def close(self) -> None:
@@ -142,17 +148,21 @@ class PipelineDataSource:
 def make_data_source(shard_dir: str, batcher_cfg, cursor_dir: str,
                      prefetch: bool = True, prefetch_depth: int = 3,
                      sharding=None, strict: bool = False,
+                     fingerprint: Optional[str] = None,
                      **loader_kwargs) -> PipelineDataSource:
     """Convenience: shard dir + batcher config -> ready-to-run data source.
 
     ``sharding`` is forwarded to PrefetchLoader so the loader thread places
     batches straight onto an SPMD mesh (see
     ``repro.distributed.spmd.make_batch_sharding_fn``). ``strict`` turns
-    corrupt-shard quarantine into a hard error; remaining keyword args
-    reach PrefetchLoader (retry/backoff/watchdog knobs).
+    corrupt-shard quarantine into a hard error; ``fingerprint`` keys the
+    cursor store (scenario provenance hash) instead of the legacy dataset
+    hash; remaining keyword args reach PrefetchLoader (retry/backoff/
+    watchdog knobs).
     """
     loader = PrefetchLoader(ShardDataset(shard_dir, batcher_cfg,
                                          strict=strict),
                             prefetch=prefetch, prefetch_depth=prefetch_depth,
                             sharding=sharding, **loader_kwargs)
-    return PipelineDataSource(loader, CursorStore(cursor_dir))
+    return PipelineDataSource(loader, CursorStore(cursor_dir),
+                              fingerprint=fingerprint)

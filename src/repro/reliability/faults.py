@@ -181,30 +181,32 @@ class FaultPlan:
 
 
 # ---------------------------------------------------------------------------
-# Global plan: installed explicitly or lazily from REPRO_FAULTS
+# Global plan: installed explicitly or lazily from REPRO_FAULTS.
+#
+# The plan rides the shared knob ladder (scenario/knobs.py). Unlike the
+# backend knobs, None here is a REAL value — install(None) means
+# "explicitly no plan" and beats the env var — and the env rung is parsed
+# once and memoized (cache_env=True) because fire() sits on production
+# hot paths and must stay one attribute check when no plan is active.
 # ---------------------------------------------------------------------------
 
-_ACTIVE: Optional[FaultPlan] = None
-_ENV_CHECKED = False
+from repro.scenario.knobs import Knob as _Knob  # noqa: E402
+
+PLAN_KNOB = _Knob("faults", ENV_VAR, parse=lambda text: FaultPlan.parse(text),
+                  cache_env=True, kind="plan")
 
 
 def install(plan: Optional[FaultPlan]) -> Optional[FaultPlan]:
     """Install (or with None, clear) the process-global fault plan.
     Returns the previous plan so tests can restore it."""
-    global _ACTIVE, _ENV_CHECKED
-    prev = _ACTIVE
-    _ACTIVE = plan
-    _ENV_CHECKED = True          # explicit install wins over the env var
+    prev = PLAN_KNOB.get_default()
+    PLAN_KNOB.set_default(plan)      # explicit install wins over the env var
     return prev
 
 
 def active_plan() -> Optional[FaultPlan]:
     """The installed plan, else one parsed from REPRO_FAULTS (checked once)."""
-    global _ACTIVE, _ENV_CHECKED
-    if not _ENV_CHECKED:
-        _ENV_CHECKED = True
-        _ACTIVE = FaultPlan.from_env()
-    return _ACTIVE
+    return PLAN_KNOB.resolve()
 
 
 def fire(site: str) -> Optional[FaultSpec]:
@@ -239,13 +241,12 @@ class use_plan:
 
     def __init__(self, plan: Optional[FaultPlan]):
         self.plan = plan
-        self._prev: Tuple[Optional[FaultPlan], bool] = (None, False)
+        self._prev: Tuple = ()
 
     def __enter__(self) -> Optional[FaultPlan]:
-        self._prev = (_ACTIVE, _ENV_CHECKED)
+        self._prev = PLAN_KNOB.snapshot()
         install(self.plan)
         return self.plan
 
     def __exit__(self, *exc) -> None:
-        global _ACTIVE, _ENV_CHECKED
-        _ACTIVE, _ENV_CHECKED = self._prev
+        PLAN_KNOB.restore(self._prev)

@@ -1,0 +1,32 @@
+"""repro.scenario — the declarative config surface (spec + knob ladder).
+
+Lazy exports (PEP 562): ``kernels/dispatch.py`` and
+``reliability/faults.py`` import :mod:`repro.scenario.knobs` at module
+level, while :mod:`repro.scenario.spec` validates fault strings via
+``reliability.faults`` — eager imports here would close that cycle.
+"""
+from repro.scenario.knobs import (UNSET, Knob, get_knob, resolve_knob,
+                                  set_knob_default)
+
+_LAZY = {
+    "ScenarioSpec": "repro.scenario.spec",
+    "ScenarioValidationError": "repro.scenario.spec",
+    "ModelSpec": "repro.scenario.spec",
+    "BatcherSpec": "repro.scenario.spec",
+    "DataSpec": "repro.scenario.spec",
+    "TrainSpec": "repro.scenario.spec",
+    "ServeSpec": "repro.scenario.spec",
+    "KnobsSpec": "repro.scenario.spec",
+    "SCHEMA_VERSION": "repro.scenario.spec",
+    "parse_set_args": "repro.scenario.spec",
+}
+
+__all__ = ["UNSET", "Knob", "get_knob", "resolve_knob",
+           "set_knob_default"] + sorted(_LAZY)
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

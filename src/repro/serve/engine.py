@@ -161,6 +161,18 @@ class ScoringEngine:
         self._breaker_failures = 0
         self._breaker_open_until: Optional[float] = None
 
+    @classmethod
+    def from_scenario(cls, spec, params=None, rng_seed: int = 0,
+                      clock: Optional[Callable[[], float]] = None
+                      ) -> "ScoringEngine":
+        """Build an engine from a ScenarioSpec: the serve section sets the
+        admission policy/ladder/cache, the knobs section pins the attention
+        backend, and the arch's serving adapter (scenario/build.py) supplies
+        the model halves. ``params=None`` initializes fresh parameters."""
+        from repro.scenario.build import engine_from_scenario
+        return engine_from_scenario(spec, params=params, rng_seed=rng_seed,
+                                    clock=clock)
+
     @property
     def params(self):
         return self._params

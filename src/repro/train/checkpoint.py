@@ -142,9 +142,13 @@ def _snapshot_leaf(i: int, x) -> tuple:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep_last: int = 3):
+    def __init__(self, directory: str, keep_last: int = 3,
+                 meta: Optional[Dict[str, Any]] = None):
+        # ``meta``: extra provenance merged into every step's meta.json
+        # (core keys — step/ts/digests — always win on collision)
         self.dir = directory
         self.keep_last = keep_last
+        self.meta = dict(meta) if meta else {}
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         # a writer killed mid-save leaves step_*.tmp dirs; they were never
@@ -196,7 +200,8 @@ class CheckpointManager:
                 # all_steps() never reports this step
                 return
             with open(os.path.join(tmp, "meta.json"), "w") as f:
-                json.dump({"step": step, "ts": time.time(),
+                json.dump({**self.meta,
+                           "step": step, "ts": time.time(),
                            "n_arrays": len(flat),
                            "n_sharded": len(sharded_manifest),
                            "digests": digests}, f)

@@ -60,6 +60,10 @@ class TrainLoopConfig:
     # the guard passive (skips counted in metrics, loop never halts).
     # Enabling it polls the skip flag every step (one small host sync).
     halt_after_skips: int = 0
+    # extra provenance merged into every checkpoint's meta.json (e.g. the
+    # scenario name + content hash, so a checkpoint can prove which spec
+    # produced it)
+    ckpt_meta: Optional[Dict[str, Any]] = None
 
 
 def make_train_step(loss_fn: Callable, opt: Optimizer,
@@ -171,7 +175,8 @@ class Trainer:
         self.step_fn = (None if self._spmd
                         else make_train_step(loss_fn, opt, cfg.microbatches,
                                              value_and_grad_fn=value_and_grad_fn))
-        self.ckpt = (CheckpointManager(cfg.ckpt_dir, cfg.keep_last)
+        self.ckpt = (CheckpointManager(cfg.ckpt_dir, cfg.keep_last,
+                                       meta=cfg.ckpt_meta)
                      if cfg.ckpt_dir else None)
         self.history: list = []
         self.skipped_steps = 0   # non-finite steps the guard neutralized
