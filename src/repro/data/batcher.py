@@ -28,6 +28,7 @@ import numpy as np
 from repro.core.joiner import ImpressionSample, ROOSample
 from repro.core.roo_batch import ROOBatch
 from repro.data.jagged import JaggedTensor, KeyedJagged
+from repro.obs import metrics as obs_metrics
 
 import jax.numpy as jnp
 
@@ -93,6 +94,9 @@ class BatcherStats:
         self.n_impressions_dropped += plan.dropped_impressions
         self.n_requests_truncated += plan.truncated_requests
 
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self)
+
 
 def _pad2d(rows: List[np.ndarray], n: int, width: int, dtype=np.float32):
     out = np.zeros((n, width), dtype)
@@ -120,6 +124,7 @@ class ROOBatcher:
         assert cfg.b_ro % cfg.n_shards == 0 and cfg.b_nro % cfg.n_shards == 0
         self.cfg = cfg
         self.stats = BatcherStats()   # accumulated over the most recent call
+        self._trunc_warned = False    # warn once per batcher, count the rest
 
     def batches(self, samples: Sequence[ROOSample]) -> Iterator[ROOBatch]:
         for batch, _ in self.batches_with_plan(samples):
@@ -155,12 +160,20 @@ class ROOBatcher:
             batch, plan = self._pack(shard_reqs)
             self.stats.update(plan)
             if plan.dropped_impressions:
-                warnings.warn(
-                    f"ROOBatcher: dropped {plan.dropped_impressions} "
-                    f"impression(s) from {plan.truncated_requests} truncated "
-                    f"request(s) — b_nro={cfg.b_nro} (per-shard "
-                    f"{per_shard_nro}) is smaller than the request",
-                    stacklevel=2)
+                # always counted (ungated: data loss must never be silent);
+                # warned once per batcher so a long run that truncates on
+                # every batch doesn't flood stderr
+                obs_metrics.counter(
+                    "batcher.impressions_dropped",
+                    gated=False).inc(plan.dropped_impressions)
+                if not self._trunc_warned:
+                    self._trunc_warned = True
+                    warnings.warn(
+                        f"ROOBatcher: dropped {plan.dropped_impressions} "
+                        f"impression(s) from {plan.truncated_requests} "
+                        f"truncated request(s) — b_nro={cfg.b_nro} "
+                        f"(per-shard {per_shard_nro}) is smaller than the "
+                        f"request", stacklevel=2)
             yield batch, plan
 
     def _pack(self, shard_reqs: List[List[Tuple[int, ROOSample, int]]]

@@ -46,8 +46,12 @@ apply_host_device_env()
 import jax
 import jax.numpy as jnp
 
+from repro.obs.log import get_logger
+
 LM_ARCHS = ("starcoder2-15b", "deepseek-coder-33b", "phi3-medium-14b",
             "qwen3-moe-235b-a22b", "granite-moe-3b-a800m")
+
+log = get_logger("launch")
 
 
 def _parser() -> argparse.ArgumentParser:
@@ -116,6 +120,19 @@ def _parser() -> argparse.ArgumentParser:
                          "XLA_FORCE_HOST_PLATFORM_DEVICE_COUNT to the "
                          "device product. roo-lsr / hstu-gr only (plan-"
                          "routed losses).")
+    # observability (docs/OBSERVABILITY.md)
+    ap.add_argument("--obs", default=None,
+                    choices=("off", "metrics", "trace"),
+                    help="observability mode (spec obs.mode / env "
+                         "REPRO_OBS): metrics = registry counters/"
+                         "histograms, trace = metrics + span tracing")
+    ap.add_argument("--obs-export", default=None, metavar="OUT.jsonl",
+                    help="append periodic metrics snapshots to this JSONL "
+                         "file (cadence obs.export_every_s; read with "
+                         "python -m repro.obs.report)")
+    ap.add_argument("--trace-out", default=None, metavar="OUT.json",
+                    help="save the run's span trace as Chrome trace-event "
+                         "JSON (open in Perfetto; implies --obs trace)")
     return ap
 
 
@@ -134,8 +151,12 @@ def _flag_overrides(args) -> dict:
         "data.late_fraction": args.late_fraction,
         "train.halt_after_skips": args.halt_after_skips,
         "train.mesh": args.mesh,
+        "obs.mode": (args.obs if args.obs is not None
+                     else "trace" if args.trace_out else None),
     }
     out = {k: v for k, v in mapping.items() if v is not None}
+    if args.obs_export:
+        out["obs.export"] = True
     if args.sparse_emb:
         out["train.sparse_emb"] = True
     if args.strict_shards:
@@ -186,9 +207,9 @@ def _train_lm(arch: str, steps: int, ckpt_dir: Optional[str], rng) -> None:
                         ckpt_dir=ckpt_dir, ckpt_every=50),
         lambda: params)
     state = trainer.run(batch_iter, rng)
-    print(f"[{arch}-smoke] final loss "
-          f"{trainer.history[-1]['loss']:.4f} at step "
-          f"{int(state['step'])}")
+    log.info("lm-smoke-done", arch=arch,
+             loss=round(trainer.history[-1]["loss"], 4),
+             step=int(state["step"]))
 
 
 def _train_mace(steps: int, ckpt_dir: Optional[str], rng) -> None:
@@ -217,7 +238,7 @@ def _train_mace(steps: int, ckpt_dir: Optional[str], rng) -> None:
                                       ckpt_dir=ckpt_dir),
                       lambda: params)
     trainer.run(lambda s: iter(lambda: batch, None), rng)
-    print(f"[mace-smoke] final loss {trainer.history[-1]['loss']:.5f}")
+    log.info("mace-smoke-done", loss=round(trainer.history[-1]["loss"], 5))
 
 
 def main(argv=None):
@@ -241,21 +262,26 @@ def main(argv=None):
         spec = resolve_spec(args)
         if args.dump_config:
             spec.save(args.dump_config)
-            print(f"[scenario] {spec.name} ({spec.content_hash()}) -> "
-                  f"{args.dump_config}")
+            log.info("config-dumped", scenario=spec.name,
+                     hash=spec.content_hash(), path=args.dump_config)
             return None
         t0 = time.time()
         trainer, state = train_from_scenario(
-            spec, ckpt_dir=args.ckpt_dir, shard_dir=args.shard_dir)
+            spec, ckpt_dir=args.ckpt_dir, shard_dir=args.shard_dir,
+            telemetry_path=args.obs_export)
     except ScenarioValidationError as e:
         raise SystemExit(str(e))
     dt = time.time() - t0
     # history only fills every log_every steps; short runs end with none
     last = trainer.history[-1] if trainer.history else {}
-    tail = f"; final loss {last['loss']:.4f}" if "loss" in last else ""
-    tail += f"; NE {last['ne']:.4f}" if "ne" in last else ""
-    print(f"[{spec.model.arch}] {int(state['step'])} steps in {dt:.1f}s"
-          f"{tail} (scenario {spec.name} {spec.content_hash()})")
+    kv = {k: round(last[k], 4) for k in ("loss", "ne") if k in last}
+    log.info("train-done", arch=spec.model.arch, steps=int(state["step"]),
+             seconds=round(dt, 1), scenario=spec.name,
+             hash=spec.content_hash(), **kv)
+    if args.trace_out:
+        from repro.obs import trace as obs_trace
+        n = obs_trace.get_tracer().save(args.trace_out)
+        log.info("trace-saved", path=args.trace_out, events=n)
     return trainer, state
 
 

@@ -34,6 +34,7 @@ from typing import Dict, Iterable, Iterator, List, Optional, Tuple
 from repro.core.joiner import (ROOSample, _RequestJoinRecord,
                                record_to_sample)
 from repro.data.events import ConversionEvent, ImpressionEvent
+from repro.obs import metrics as obs_metrics
 
 
 @dataclasses.dataclass
@@ -62,6 +63,12 @@ class JoinStats:
         return (self.close_lag_s_sum / self.requests_emitted
                 if self.requests_emitted else 0.0)
 
+    def snapshot(self) -> dict:
+        out = dataclasses.asdict(self)
+        out["label_completeness"] = round(self.label_completeness, 6)
+        out["mean_close_lag_s"] = round(self.mean_close_lag_s, 6)
+        return out
+
 
 class WatermarkJoiner:
     """Streaming joiner with bounded-lateness windows.
@@ -73,6 +80,7 @@ class WatermarkJoiner:
     def __init__(self, cfg: Optional[OnlineJoinConfig] = None):
         self.cfg = cfg or OnlineJoinConfig()
         self.stats = JoinStats()
+        obs_metrics.register_stats("pipeline.join", self.stats)
         self._open: Dict[Tuple[int, int], _RequestJoinRecord] = {}
         self._deadlines: List[Tuple[float, int, int]] = []   # heap
         self._max_ts = float("-inf")

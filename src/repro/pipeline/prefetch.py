@@ -43,10 +43,10 @@ Graceful degradation (docs/RELIABILITY.md):
 from __future__ import annotations
 
 import dataclasses
+import os
 import queue
 import threading
 import time
-import warnings
 from typing import Iterator, List, Optional, Set, Tuple
 
 import jax
@@ -55,6 +55,10 @@ import numpy as np
 from repro.core.roo_batch import ROOBatch
 from repro.data.batcher import BatcherConfig, ROOBatcher
 from repro.data.storage import ShardCorruptionError
+from repro.obs import export as obs_export
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.log import warn_once
 from repro.pipeline.shards import (ShardManifest, load_manifest, read_shard)
 from repro.reliability import faults
 
@@ -80,14 +84,44 @@ class DatasetStats:
     """Corrupt-shard quarantine accounting (per ShardDataset)."""
     shards_quarantined: int = 0
     quarantined_files: List[str] = dataclasses.field(default_factory=list)
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
+
+    def quarantine(self, filename: str) -> int:
+        """Record one quarantined shard; returns the running total."""
+        with self._lock:
+            self.shards_quarantined += 1
+            self.quarantined_files.append(filename)
+            return self.shards_quarantined
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {"shards_quarantined": self.shards_quarantined,
+                    "quarantined_files": list(self.quarantined_files)}
 
 
 @dataclasses.dataclass
 class LoaderStats:
-    """Degraded-mode accounting (per PrefetchLoader)."""
+    """Degraded-mode accounting (per PrefetchLoader).
+
+    Mutated from the producer thread and read from the training thread —
+    go through ``inc``/``snapshot``, not bare ``+=``.
+    """
     read_retries: int = 0        # transient read failures that were retried
     read_failures: int = 0       # reads that exhausted the retry budget
     producer_restarts: int = 0   # stall-watchdog producer replacements
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
+
+    def inc(self, field: str, n: int = 1) -> None:
+        with self._lock:
+            setattr(self, field, getattr(self, field) + n)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {f.name: getattr(self, f.name)
+                    for f in dataclasses.fields(self)
+                    if not f.name.startswith("_")}
 
 
 class ShardDataset:
@@ -107,6 +141,7 @@ class ShardDataset:
         self.manifest = manifest or load_manifest(shard_dir)
         self.strict = strict
         self.stats = DatasetStats()
+        obs_metrics.register_stats("pipeline.dataset", self.stats)
         if not self.manifest.shards:
             raise ValueError(f"empty shard manifest in {shard_dir}")
 
@@ -122,16 +157,19 @@ class ShardDataset:
             if self.strict:
                 raise
             # quarantine: training keeps running on the surviving shards;
-            # the loss is counted, never silent
-            self.stats.shards_quarantined += 1
-            self.stats.quarantined_files.append(info.filename)
-            warnings.warn(f"quarantined corrupt shard ({e}); "
-                          f"{self.stats.shards_quarantined} quarantined "
-                          f"so far", RuntimeWarning, stacklevel=2)
+            # the loss is counted, never silent. One warning per shard
+            # file — a chaos run quarantining the same shard every epoch
+            # counts repeats instead of flooding stderr.
+            total = self.stats.quarantine(info.filename)
+            warn_once(os.path.join(self.shard_dir, info.filename),
+                      f"quarantined corrupt shard ({e}); "
+                      f"{total} quarantined so far", RuntimeWarning)
             return []
         # a fresh batcher per shard: packing must not depend on what was
         # packed before the shard, or the cursor loses determinism
-        return list(ROOBatcher(self.batcher_cfg).batches(samples))
+        with obs_trace.span("pipeline.pack", shard=shard_index,
+                            samples=len(samples)):
+            return list(ROOBatcher(self.batcher_cfg).batches(samples))
 
 
 class _Producer:
@@ -196,6 +234,7 @@ class PrefetchLoader:
         self.retry_backoff_max_s = retry_backoff_max_s
         self.stall_timeout_s = stall_timeout_s
         self.stats = LoaderStats()
+        obs_metrics.register_stats("pipeline.loader", self.stats)
         self._retry_rng = np.random.default_rng(retry_seed)
         self._producers: Set[_Producer] = set()
         self._queues = {}             # producer -> its queue (for close())
@@ -219,12 +258,13 @@ class PrefetchLoader:
         self.close()
 
     def _place(self, batch: ROOBatch):
-        s = self.sharding
-        if s is None:
-            return jax.block_until_ready(jax.device_put(batch))
-        if callable(s):
-            s = s(batch)
-        return jax.block_until_ready(jax.device_put(batch, s))
+        with obs_trace.span("pipeline.device_put"):
+            s = self.sharding
+            if s is None:
+                return jax.block_until_ready(jax.device_put(batch))
+            if callable(s):
+                s = s(batch)
+            return jax.block_until_ready(jax.device_put(batch, s))
 
     # -- fault-tolerant shard read ----------------------------------------------
     def _read_with_retry(self, shard_index: int,
@@ -244,9 +284,9 @@ class PrefetchLoader:
                 raise
             except OSError:
                 if attempt >= self.max_retries:
-                    self.stats.read_failures += 1
+                    self.stats.inc("read_failures")
                     raise
-                self.stats.read_retries += 1
+                self.stats.inc("read_retries")
                 attempt += 1
                 # full jitter in [0.5, 1.5) x the exponential term: retries
                 # from many workers must not synchronize into a thundering
@@ -273,6 +313,7 @@ class PrefetchLoader:
             epoch, shard, skip = epoch + 1, 0, 0
         while self.epochs is None or epoch < self.epochs:
             packed = self._read_with_retry(shard, waiter)
+            obs_export.maybe_emit("pipeline.shard")
             if skip >= len(packed) > 0:
                 # cursors we emit always satisfy batch < len(packed); an
                 # out-of-range value means the shards or the batcher config
@@ -359,7 +400,7 @@ class PrefetchLoader:
                     # deadline — abandon it and restart at the current
                     # cursor. The zombie's generation tag keeps any batch
                     # it might still emit out of the stream.
-                    self.stats.producer_restarts += 1
+                    self.stats.inc("producer_restarts")
                     prod.stop.set()
                     self._producers.discard(prod)
                     self._queues.pop(prod, None)
@@ -375,6 +416,7 @@ class PrefetchLoader:
                     raise payload
                 batch, nxt = payload
                 resume = (nxt, 0)
+                obs_metrics.gauge("pipeline.queue_depth").set(q.qsize())
                 yield batch, nxt
         finally:
             prod.close(q)

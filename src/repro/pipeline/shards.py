@@ -30,6 +30,7 @@ from repro.core.joiner import ROOSample
 from repro.data.storage import (SCHEMA_VERSION, ShardCorruptionError,
                                 decode_roo_shard, encode_roo_shard,
                                 peek_shard_header)
+from repro.obs import trace as obs_trace
 from repro.reliability import faults
 
 MANIFEST_NAME = "manifest.json"
@@ -208,15 +209,18 @@ def read_shard(shard_dir: str, shard: ShardInfo) -> List[ROOSample]:
     if spec is not None and spec.kind == "error":   # injected transient I/O
         raise faults.TransientFault(
             f"injected read error on {shard.filename}")
-    with open(os.path.join(shard_dir, shard.filename), "rb") as f:
-        blob = f.read()
+    with obs_trace.span("pipeline.read", shard=shard.filename,
+                        bytes=shard.n_bytes):
+        with open(os.path.join(shard_dir, shard.filename), "rb") as f:
+            blob = f.read()
     if spec is not None and spec.kind == "corrupt":
         blob = faults.corrupt_bytes("shard.read", blob, spec)
-    try:
-        return decode_roo_shard(blob)
-    except ShardCorruptionError as e:
-        raise ShardCorruptionError(
-            f"{shard.filename}: {e}") from e
+    with obs_trace.span("pipeline.decode", shard=shard.filename):
+        try:
+            return decode_roo_shard(blob)
+        except ShardCorruptionError as e:
+            raise ShardCorruptionError(
+                f"{shard.filename}: {e}") from e
 
 
 def read_all(shard_dir: str,

@@ -42,6 +42,8 @@ from typing import Dict, Iterable, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import metrics as _obs_metrics
+
 ENV_VAR = "REPRO_FAULTS"
 
 KINDS = ("error", "corrupt", "torn", "stall", "nan")
@@ -250,3 +252,18 @@ class use_plan:
 
     def __exit__(self, *exc) -> None:
         PLAN_KNOB.restore(self._prev)
+
+
+def _obs_snapshot() -> dict:
+    """Collector for ``repro.obs``: the active plan's per-site accounting."""
+    plan = active_plan()
+    if plan is None:
+        return {"active": False}
+    with plan._lock:
+        return {"active": True, "seed": plan.seed,
+                "sites": sorted(plan.specs),
+                "visits": dict(plan.stats.visits),
+                "fires": dict(plan.stats.fires)}
+
+
+_obs_metrics.register_stats("reliability.faults", _obs_snapshot)

@@ -23,7 +23,7 @@ import dataclasses
 import hashlib
 import json
 import os
-from typing import Any, Callable, Dict, Iterator, List, NamedTuple, Optional
+from typing import Any, Callable, Dict, List, NamedTuple, Optional
 
 from repro.scenario.spec import ScenarioSpec, ScenarioValidationError
 
@@ -323,27 +323,63 @@ def synthetic_dlrm_batches(spec: ScenarioSpec, cfg, n_batches: int = 4
 
 def train_from_scenario(spec: ScenarioSpec, *, ckpt_dir: Optional[str] = None,
                         shard_dir: Optional[str] = None, rng_seed: int = 0,
-                        prints: bool = True):
+                        prints: bool = True,
+                        telemetry_path: Optional[str] = None):
     """Run the spec's training end to end; returns ``(trainer, state)``.
 
-    ``ckpt_dir``/``shard_dir`` are runtime locations, deliberately NOT part
-    of the spec (a spec hash must be machine-portable). Raises
+    ``ckpt_dir``/``shard_dir``/``telemetry_path`` are runtime locations,
+    deliberately NOT part of the spec (a spec hash must be machine-
+    portable). ``telemetry_path`` (or ``obs.export`` in the spec, which
+    defaults the file to ``<ckpt_dir>/telemetry.jsonl``) installs a JSONL
+    telemetry emitter for the duration of the run. Raises
     :class:`ScenarioValidationError` on config conflicts (the CLI turns
     those into exit messages).
     """
+    spec.validate().apply()
+    emitter = _install_emitter(spec, telemetry_path, ckpt_dir)
+    try:
+        return _train_from_scenario(spec, ckpt_dir=ckpt_dir,
+                                    shard_dir=shard_dir, rng_seed=rng_seed,
+                                    prints=prints)
+    finally:
+        if emitter is not None:
+            from repro.obs import export as obs_export
+            obs_export.install(None)
+            emitter.close(final_source="train.final")
+
+
+def _install_emitter(spec: ScenarioSpec, telemetry_path: Optional[str],
+                     ckpt_dir: Optional[str]):
+    if not (spec.obs.export or telemetry_path):
+        return None
+    from repro.obs import export as obs_export
+    if telemetry_path is None:
+        if not ckpt_dir:
+            raise ScenarioValidationError(
+                "obs.export needs somewhere to write: pass --obs-export "
+                "PATH or a --ckpt-dir (defaults to "
+                "<ckpt_dir>/telemetry.jsonl)")
+        os.makedirs(ckpt_dir, exist_ok=True)
+        telemetry_path = os.path.join(ckpt_dir, "telemetry.jsonl")
+    emitter = obs_export.TelemetryEmitter(
+        telemetry_path, every_s=spec.obs.export_every_s,
+        scenario_hash=spec.content_hash())
+    obs_export.install(emitter)
+    return emitter
+
+
+def _train_from_scenario(spec: ScenarioSpec, *, ckpt_dir, shard_dir,
+                         rng_seed, prints):
     import jax
 
-    spec.validate().apply()
-
-    def say(msg):
-        if prints:
-            print(msg)
+    from repro.obs.log import get_logger
+    log = get_logger("scenario", enabled=prints)
 
     from repro.reliability import faults as _faults
     _plan = _faults.active_plan()
     if _plan is not None:
         # fault injection is never silent: a chaos run announces itself
-        say(f"[reliability] fault injection ACTIVE: {_plan.to_env()}")
+        log.info("fault-injection-active", plan=_plan.to_env())
 
     rng = jax.random.PRNGKey(rng_seed)
     arch, tr = spec.model.arch, spec.train
@@ -362,8 +398,9 @@ def train_from_scenario(spec: ScenarioSpec, *, ckpt_dir: Optional[str] = None,
         from repro.launch.mesh import make_mesh_from_spec
         mesh = make_mesh_from_spec(tr.mesh)
         plan = plan_for_mesh(mesh)
-        say(f"[spmd] mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} "
-            f"over {mesh.devices.size} device(s)")
+        log.info("mesh",
+                 axes=dict(zip(mesh.axis_names, mesh.devices.shape)),
+                 devices=mesh.devices.size)
     if tr.sparse_emb and plan is not None:
         # the GatheredTable proxy gathers rows locally, bypassing the psum
         # lookups a row-sharded table needs — pick one regime per run
@@ -418,7 +455,7 @@ def train_from_scenario(spec: ScenarioSpec, *, ckpt_dir: Optional[str] = None,
         state = trainer.run(_cycling_iter_fn(batches), rng)
     elif spec.data.source == "disk":
         state = _train_disk(spec, trainer, batcher_cfg, rng, plan,
-                            shard_dir=shard_dir, ckpt_dir=ckpt_dir, say=say)
+                            shard_dir=shard_dir, ckpt_dir=ckpt_dir, log=log)
     else:
         from repro.data.batcher import ROOBatcher
         batches = list(ROOBatcher(batcher_cfg).batches(build_samples(spec)))
@@ -438,7 +475,7 @@ def _cycling_iter_fn(batches):
 
 
 def _train_disk(spec, trainer, batcher_cfg, rng, plan, *, shard_dir,
-                ckpt_dir, say):
+                ckpt_dir, log):
     """Disk pipeline: (re)build shards, wire cursor resume, run."""
     from repro.distributed.spmd import make_batch_sharding_fn
     from repro.pipeline import (OnlineJoinConfig, WatermarkJoiner,
@@ -456,8 +493,7 @@ def _train_disk(spec, trainer, batcher_cfg, rng, plan, *, shard_dir,
                 f"settings:\n  stored:    {manifest.provenance}\n"
                 f"  requested: {provenance}\n"
                 f"Pick another --shard-dir or delete the old one.")
-        say(f"[pipeline] reusing {len(manifest.shards)} shard(s) in "
-            f"{shard_dir}")
+        log.info("shards-reused", n=len(manifest.shards), dir=shard_dir)
     except FileNotFoundError:
         from repro.data.events import EventSimulator
         joiner = WatermarkJoiner(OnlineJoinConfig(
@@ -469,11 +505,11 @@ def _train_disk(spec, trainer, batcher_cfg, rng, plan, *, shard_dir,
             requests_per_shard=spec.data.requests_per_shard,
             provenance=provenance)
         st = joiner.stats
-        say(f"[pipeline] joined {st.requests_emitted} requests "
-            f"(label completeness {st.label_completeness:.3f}, "
-            f"mean close lag {st.mean_close_lag_s:.0f}s) -> "
-            f"{len(manifest.shards)} shard(s), "
-            f"{manifest.n_bytes / 1e6:.2f} MB on disk")
+        log.info("shards-built", requests=st.requests_emitted,
+                 label_completeness=round(st.label_completeness, 3),
+                 mean_close_lag_s=round(st.mean_close_lag_s, 1),
+                 shards=len(manifest.shards),
+                 mb=round(manifest.n_bytes / 1e6, 2))
     cursor_dir = os.path.join(ckpt_dir or shard_dir, "cursors")
     source = make_data_source(shard_dir, batcher_cfg, cursor_dir,
                               prefetch=spec.data.prefetch,
@@ -485,11 +521,10 @@ def _train_disk(spec, trainer, batcher_cfg, rng, plan, *, shard_dir,
                             on_checkpoint=source.on_checkpoint)
     ds_stats = source.loader.dataset.stats
     if ds_stats.shards_quarantined:
-        say(f"[reliability] {ds_stats.shards_quarantined} corrupt "
-            f"shard(s) quarantined: {ds_stats.quarantined_files}")
+        log.info("shards-quarantined", n=ds_stats.shards_quarantined,
+                 files=ds_stats.quarantined_files)
     if trainer.skipped_steps:
-        say(f"[reliability] {trainer.skipped_steps} non-finite "
-            f"step(s) skipped by the guard")
+        log.info("steps-skipped", n=trainer.skipped_steps)
     return state
 
 

@@ -12,6 +12,9 @@ For EVERY registered recsys scenario:
      ROO-servable arch.
 
 Run:  PYTHONPATH=src python -m repro.scenario.smoke [--steps 2] [--arch X]
+      [--trace OUT.json]   (force obs.mode=trace and save the accumulated
+                            span trace as Chrome trace-event JSON — the CI
+                            artifact; open in Perfetto)
 """
 from __future__ import annotations
 
@@ -26,7 +29,7 @@ from repro.launch.hostdevices import apply_host_device_env
 apply_host_device_env()
 
 
-def smoke_one(spec, steps: int) -> dict:
+def smoke_one(spec, steps: int, trace: bool = False) -> dict:
     """Round-trip + short train + provenance + serve for one scenario."""
     from repro.scenario.build import build_samples, train_from_scenario
     from repro.scenario.spec import ScenarioSpec
@@ -40,9 +43,12 @@ def smoke_one(spec, steps: int) -> dict:
 
     # 2+3. train through the shared construction path; checkpoint meta
     # must carry the provenance hash
-    run = spec.with_overrides({"train.steps": steps,
-                               "train.ckpt_every": steps,
-                               "train.log_every": steps})
+    overrides = {"train.steps": steps,
+                 "train.ckpt_every": steps,
+                 "train.log_every": steps}
+    if trace:
+        overrides["obs.mode"] = "trace"
+    run = spec.with_overrides(overrides)
     with tempfile.TemporaryDirectory() as tmp:
         ckpt_dir = os.path.join(tmp, "ckpt")
         trainer, state = train_from_scenario(run, ckpt_dir=ckpt_dir,
@@ -75,19 +81,29 @@ def main(argv=None) -> None:
     ap.add_argument("--steps", type=int, default=2)
     ap.add_argument("--arch", default=None,
                     help="run a single scenario instead of all")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="run the scenarios under obs.mode=trace and save "
+                         "the span trace as Chrome trace-event JSON")
     args = ap.parse_args(argv)
 
     from repro.configs.registry import SCENARIO_ARCHS, scenario
+    from repro.obs.log import get_logger
+    log = get_logger("scenario-smoke")
     archs = (args.arch,) if args.arch else SCENARIO_ARCHS
     for arch in archs:
         t0 = time.time()
-        row = smoke_one(scenario(arch), args.steps)
-        loss = ("-" if row["loss"] is None else f"{row['loss']:.4f}")
-        print(f"[scenario-smoke] {arch:<14} hash={row['hash']} "
-              f"steps={row['steps']} loss={loss} "
-              f"served={row['served_impressions']} "
-              f"({time.time() - t0:.1f}s)")
-    print(f"[scenario-smoke] OK: {len(archs)} scenario(s)")
+        row = smoke_one(scenario(arch), args.steps,
+                        trace=args.trace is not None)
+        log.info("smoke", arch=arch, hash=row["hash"], steps=row["steps"],
+                 loss=("-" if row["loss"] is None
+                       else round(row["loss"], 4)),
+                 served=row["served_impressions"],
+                 seconds=round(time.time() - t0, 1))
+    if args.trace:
+        from repro.obs import trace as obs_trace
+        n = obs_trace.get_tracer().save(args.trace)
+        log.info("trace-saved", path=args.trace, events=n)
+    log.info("ok", scenarios=len(archs))
 
 
 if __name__ == "__main__":

@@ -126,8 +126,21 @@ class KnobsSpec:
     faults: Optional[str] = None        # REPRO_FAULTS grammar
 
 
+@dataclasses.dataclass(frozen=True)
+class ObsSpec:
+    """Observability (repro.obs). ``mode`` rides the knob ladder like any
+    other knob (``None`` leaves REPRO_OBS / auto in charge); ``export``
+    asks the run's build path to install a JSONL telemetry emitter (the
+    file path stays a runtime argument — specs never carry paths)."""
+    mode: Optional[str] = None          # off | metrics | trace
+    export: bool = False
+    export_every_s: float = 0.0         # min seconds between JSONL lines
+    verbosity: Optional[int] = None     # 0=errors 1=progress 2=debug
+
+
 _SECTIONS = {"model": ModelSpec, "batcher": BatcherSpec, "data": DataSpec,
-             "train": TrainSpec, "serve": ServeSpec, "knobs": KnobsSpec}
+             "train": TrainSpec, "serve": ServeSpec, "knobs": KnobsSpec,
+             "obs": ObsSpec}
 
 
 # ---------------------------------------------------------------------------
@@ -217,6 +230,7 @@ class ScenarioSpec:
     train: TrainSpec = TrainSpec()
     serve: ServeSpec = ServeSpec()
     knobs: KnobsSpec = KnobsSpec()
+    obs: ObsSpec = ObsSpec()
 
     # -- serialization ----------------------------------------------------------
     def to_json(self) -> dict:
@@ -318,6 +332,16 @@ class ScenarioSpec:
                 FaultPlan.parse(self.knobs.faults)
             except ValueError as e:
                 bad(f"knobs.faults: {e}")
+        if self.obs.mode is not None:
+            from repro.obs.metrics import OBS_MODES
+            if self.obs.mode not in OBS_MODES:
+                bad(f"obs.mode {self.obs.mode!r} not in "
+                    + "|".join(OBS_MODES))
+        if self.obs.verbosity is not None and self.obs.verbosity < 0:
+            bad(f"obs.verbosity must be >= 0, got {self.obs.verbosity}")
+        if self.obs.export_every_s < 0:
+            bad(f"obs.export_every_s must be >= 0, got "
+                f"{self.obs.export_every_s}")
         return self
 
     # -- provenance hashes ------------------------------------------------------
@@ -392,6 +416,12 @@ class ScenarioSpec:
         if self.knobs.faults is not None:
             from repro.reliability import faults
             faults.install(faults.FaultPlan.parse(self.knobs.faults))
+        if self.obs.mode is not None:
+            from repro.obs.metrics import OBS_KNOB
+            OBS_KNOB.set_default(self.obs.mode)
+        if self.obs.verbosity is not None:
+            from repro.obs.log import VERBOSITY_KNOB
+            VERBOSITY_KNOB.set_default(self.obs.verbosity)
         return self
 
 

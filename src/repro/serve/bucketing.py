@@ -76,3 +76,8 @@ class BucketStats:
     @property
     def distinct_shapes(self) -> int:
         return len(self.counts)
+
+    def snapshot(self) -> dict:
+        return {"distinct_shapes": self.distinct_shapes,
+                "counts": {f"{s.b_ro}x{s.b_nro}": c
+                           for s, c in self.counts.items()}}

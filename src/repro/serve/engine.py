@@ -26,6 +26,7 @@ the full result set host-side twice.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import (Callable, Dict, Hashable, Iterable, Iterator, List,
                     Optional, Sequence, Tuple)
@@ -36,6 +37,9 @@ import numpy as np
 
 from repro.core.joiner import ROOSample
 from repro.data.batcher import BatcherConfig, BatchPlan, ROOBatcher
+from repro.obs import export as obs_export
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.reliability import faults
 from repro.serve.bucketing import BucketLadder, BucketStats
 from repro.serve.user_cache import UserTowerCache, request_key
@@ -91,6 +95,27 @@ class EngineStats:
     n_shed_requests: int = 0           # requests shed by the open breaker
     n_breaker_opens: int = 0           # open transitions (incl. re-opens)
     buckets: BucketStats = dataclasses.field(default_factory=BucketStats)
+    # counters are mutated from whatever thread drives scoring and read
+    # from monitoring threads; bare += would lose updates
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
+
+    def inc(self, field: str, n: int = 1) -> None:
+        with self._lock:
+            setattr(self, field, getattr(self, field) + n)
+
+    def record_bucket(self, spec) -> None:
+        with self._lock:
+            self.buckets.record(spec)
+
+    def snapshot(self) -> dict:
+        """Consistent point-in-time copy of every counter."""
+        with self._lock:
+            out = {f.name: getattr(self, f.name)
+                   for f in dataclasses.fields(self)
+                   if not f.name.startswith("_") and f.name != "buckets"}
+            out["buckets"] = self.buckets.snapshot()
+            return out
 
 
 def split_oversize(sample: ROOSample, cap: int) -> List[ROOSample]:
@@ -153,6 +178,8 @@ class ScoringEngine:
         self._oldest_ts: Optional[float] = None
         self._next_ticket = 0
         self._results: Dict[int, np.ndarray] = {}
+        self._submit_ts: Dict[int, float] = {}
+        obs_metrics.register_stats("serve.engine", self)
         # trailing score dims ((,) single-task, (n_tasks,) multi-task) from
         # the last scored batch — used to shape empty results when a whole
         # flush-group has zero impressions and the model never runs
@@ -185,6 +212,18 @@ class ScoringEngine:
         if self.cache is not None:
             self.cache.clear()
 
+    def snapshot(self) -> dict:
+        """Whole-engine view for ``obs.snapshot()``: scoring counters,
+        cache effectiveness, breaker state — one consistent read."""
+        out = {"stats": self.stats.snapshot(),
+               "pending_requests": len(self._pending),
+               "breaker": {"consecutive_failures": self._breaker_failures,
+                           "open": self._breaker_open_until is not None}}
+        if self.cache is not None:
+            out["cache"] = {"size": len(self.cache),
+                            **self.cache.stats.snapshot()}
+        return out
+
     # ---- online front end ----------------------------------------------------
     def submit(self, request: ROOSample) -> int:
         """Admit one request; returns a ticket redeemable via ``take``."""
@@ -194,6 +233,8 @@ class ScoringEngine:
             self._oldest_ts = self.clock()
         self._pending.append((ticket, request))
         self._pending_imps += request.num_impressions
+        if obs_metrics.metrics_enabled():
+            self._submit_ts[ticket] = self.clock()
         return ticket
 
     def poll(self, now: Optional[float] = None) -> bool:
@@ -204,9 +245,9 @@ class ScoringEngine:
         now = self.clock() if now is None else now
         if (len(self._pending) >= self.policy.max_requests
                 or self._pending_imps >= self.policy.max_impressions):
-            self.stats.n_size_flushes += 1
+            self.stats.inc("n_size_flushes")
         elif (now - self._oldest_ts) * 1e3 >= self.policy.max_delay_ms:
-            self.stats.n_deadline_flushes += 1
+            self.stats.inc("n_deadline_flushes")
         else:
             return False
         self._drain()
@@ -215,7 +256,7 @@ class ScoringEngine:
     def flush(self) -> None:
         """Force-score everything pending regardless of policy."""
         if self._pending:
-            self.stats.n_forced_flushes += 1
+            self.stats.inc("n_forced_flushes")
             self._drain()
 
     def take(self, ticket: int) -> Optional[np.ndarray]:
@@ -227,6 +268,10 @@ class ScoringEngine:
         self._pending_imps, self._oldest_ts = 0, None
         for ticket, scores in self._score_keyed(pending):
             self._results[ticket] = scores
+            t0 = self._submit_ts.pop(ticket, None)
+            if t0 is not None:
+                obs_metrics.histogram("engine.request_ms").observe(
+                    (self.clock() - t0) * 1e3)
 
     # ---- bulk front end ------------------------------------------------------
     def score_stream(self, requests: Iterable[ROOSample]
@@ -250,6 +295,8 @@ class ScoringEngine:
         """Split oversize requests, group into bucket-shaped flushes, score,
         reassemble per original key. Yields each key exactly once."""
         top = self.ladder.max_rung
+        tracing = obs_trace.tracing_enabled()
+        trace_ids: Dict[Hashable, int] = {}
         parts_needed: Dict[Hashable, int] = {}
         parts_got: Dict[Hashable, List[np.ndarray]] = {}
         group: List[Tuple[Hashable, ROOSample]] = []
@@ -266,6 +313,10 @@ class ScoringEngine:
                 got.append(piece)
                 if len(got) == parts_needed[key]:
                     del parts_got[key], parts_needed[key]
+                    if tracing:
+                        obs_trace.instant("engine.reassemble",
+                                          trace_id=trace_ids.pop(key, None),
+                                          parts=len(got))
                     errs = [p for p in got if isinstance(p, ScoreError)]
                     if errs:
                         # one bad piece poisons the request: a partial
@@ -274,9 +325,9 @@ class ScoringEngine:
                         hard = [e for e in errs if not e.shed]
                         err = hard[0] if hard else errs[0]
                         if hard:
-                            self.stats.n_failed_requests += 1
+                            self.stats.inc("n_failed_requests")
                         else:
-                            self.stats.n_shed_requests += 1
+                            self.stats.inc("n_shed_requests")
                         yield key, err
                         continue
                     yield key, (np.concatenate(got, axis=0)
@@ -288,66 +339,84 @@ class ScoringEngine:
                        np.zeros((0,) + self._score_tail, np.float32))
 
         for key, sample in keyed:
-            self.stats.n_requests += 1
-            self.stats.n_impressions += sample.num_impressions
+            self.stats.inc("n_requests")
+            self.stats.inc("n_impressions", sample.num_impressions)
+            if tracing:
+                trace_ids[key] = obs_trace.new_trace_id()
+                obs_trace.instant("engine.admit", trace_id=trace_ids[key],
+                                  impressions=sample.num_impressions)
             if sample.num_impressions == 0:
                 deferred_empty.append(key)
                 continue
             parts = split_oversize(sample, top.b_nro)
             parts_needed[key] = len(parts)
             if len(parts) > 1:
-                self.stats.n_split_requests += 1
+                self.stats.inc("n_split_requests")
             for part in parts:
                 n = part.num_impressions
                 if group and (len(group) + 1 > top.b_ro
                               or group_imps + n > top.b_nro):
-                    yield from reassemble(self._score_group(group))
+                    yield from reassemble(
+                        self._score_group(group, trace_ids))
                     yield from flush_empty()
                     group, group_imps = [], 0
                 group.append((key, part))
                 group_imps += n
         if group:
-            yield from reassemble(self._score_group(group))
+            yield from reassemble(self._score_group(group, trace_ids))
         yield from flush_empty()
         assert not parts_needed, "engine bug: unreassembled request parts"
 
-    def _score_group(self, group: List[Tuple[Hashable, ROOSample]]
+    def _score_group(self, group: List[Tuple[Hashable, ROOSample]],
+                     trace_ids: Dict[Hashable, int]
                      ) -> Iterator[Tuple[Hashable, np.ndarray]]:
         """Score one flush-group at its bucket shape; yields (key, piece)
         for every request part via the batch plan's slot mapping."""
         n_imps = sum(s.num_impressions for _, s in group)
-        bucket = self.ladder.select(len(group), n_imps)
-        self.stats.buckets.record(bucket)
-        batcher = ROOBatcher(BatcherConfig(
-            b_ro=bucket.b_ro, b_nro=bucket.b_nro,
-            hist_len=self.policy.hist_len))
-        samples = [s for _, s in group]
-        for batch, plan in batcher.batches_with_plan(samples):
-            if self._breaker_sheds():
+        with obs_trace.span("engine.flush", requests=len(group),
+                            impressions=n_imps):
+            with obs_trace.span("engine.bucket") as bspan:
+                bucket = self.ladder.select(len(group), n_imps)
+                bspan.set(b_ro=bucket.b_ro, b_nro=bucket.b_nro)
+                self.stats.record_bucket(bucket)
+                batcher = ROOBatcher(BatcherConfig(
+                    b_ro=bucket.b_ro, b_nro=bucket.b_nro,
+                    hist_len=self.policy.hist_len))
+                samples = [s for _, s in group]
+                plans = list(batcher.batches_with_plan(samples))
+            for batch, plan in plans:
+                if self._breaker_sheds():
+                    for p in plan.requests:
+                        yield (group[p.request_index][0],
+                               ScoreError("shed: circuit breaker open",
+                                          shed=True))
+                    continue
+                tids = {trace_ids.get(group[p.request_index][0])
+                        for p in plan.requests} - {None}
+                span = obs_trace.span("engine.score",
+                                      rows=len(plan.requests),
+                                      trace_ids=sorted(tids))
+                try:
+                    with span:
+                        scores = self._score_batch(batch, samples, plan)
+                except Exception as e:   # isolation boundary: batch != engine
+                    self._breaker_record_failure()
+                    self.stats.inc("n_failed_batches")
+                    for p in plan.requests:
+                        yield (group[p.request_index][0],
+                               ScoreError(f"scoring failed: {e!r}"))
+                    continue
+                self._breaker_failures = 0
+                self._breaker_open_until = None
+                self.stats.inc("n_batches")
                 for p in plan.requests:
+                    if p.n_dropped:
+                        raise RuntimeError(
+                            "engine invariant violated: truncation inside a "
+                            f"bucket-shaped batch ({p.n_dropped} dropped)")
                     yield (group[p.request_index][0],
-                           ScoreError("shed: circuit breaker open",
-                                      shed=True))
-                continue
-            try:
-                scores = self._score_batch(batch, samples, plan)
-            except Exception as e:   # isolation boundary: batch != engine
-                self._breaker_record_failure()
-                self.stats.n_failed_batches += 1
-                for p in plan.requests:
-                    yield (group[p.request_index][0],
-                           ScoreError(f"scoring failed: {e!r}"))
-                continue
-            self._breaker_failures = 0
-            self._breaker_open_until = None
-            self.stats.n_batches += 1
-            for p in plan.requests:
-                if p.n_dropped:
-                    raise RuntimeError(
-                        "engine invariant violated: truncation inside a "
-                        f"bucket-shaped batch ({p.n_dropped} dropped)")
-                yield (group[p.request_index][0],
-                       scores[p.slot_start:p.slot_start + p.n_packed])
+                           scores[p.slot_start:p.slot_start + p.n_packed])
+        obs_export.maybe_emit("serve.flush")
 
     # ---- circuit breaker -----------------------------------------------------
     def _breaker_sheds(self) -> bool:
@@ -395,7 +464,7 @@ class ScoringEngine:
             for row, v in cached.items():
                 u_host[row] = v
             user = jnp.asarray(u_host)
-            self.stats.n_full_cache_batches += 1
+            self.stats.inc("n_full_cache_batches")
         else:
             user = self._user(self.params, batch)
             u_host = np.asarray(user)

@@ -51,6 +51,12 @@ class CacheStats:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
+    def snapshot(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "invalidations": self.invalidations,
+                "hit_rate": round(self.hit_rate, 6)}
+
 
 class UserTowerCache:
     """LRU cache: RO-payload fingerprint -> user-tower output row (numpy)."""

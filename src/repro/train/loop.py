@@ -27,6 +27,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.embeddings import sparse as _sp
+from repro.obs import export as obs_export
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.reliability import faults
 from repro.train.checkpoint import CheckpointManager
 from repro.train.optim import Optimizer
@@ -180,6 +183,16 @@ class Trainer:
                      if cfg.ckpt_dir else None)
         self.history: list = []
         self.skipped_steps = 0   # non-finite steps the guard neutralized
+        self._last_step = 0
+        obs_metrics.register_stats("train", self)
+
+    def snapshot(self) -> dict:
+        """Trainer view for ``obs.snapshot()``: progress + the guard's
+        skip count + the latest logged metrics row."""
+        return {"last_step": self._last_step,
+                "total_steps": self.cfg.total_steps,
+                "skipped_steps": self.skipped_steps,
+                "last_log": dict(self.history[-1]) if self.history else None}
 
     def init_state(self, rng: Optional[jax.Array] = None) -> Dict:
         params = self.init_params_fn()
@@ -229,46 +242,56 @@ class Trainer:
         t0 = time.monotonic()
         consecutive_skips = 0
         for step in range(start, self.cfg.total_steps):
-            batch = next(it)
-            spec = faults.fire("train.batch")
-            if spec is not None and spec.kind == "nan":
-                batch = _poison_batch(batch)
-            if self._spmd:
-                # cached shardings; no-op for loader-placed batches
-                batch = self._place_batch(batch)
-            state, metrics = self.step_fn(state, batch,
-                                          jax.random.fold_in(base_rng, step))
-            if self.cfg.halt_after_skips > 0:
-                if int(metrics["skipped"]):
-                    consecutive_skips += 1
-                    self.skipped_steps += 1
-                    if consecutive_skips >= self.cfg.halt_after_skips:
-                        raise NonFiniteLossError(
-                            f"{consecutive_skips} consecutive non-finite "
-                            f"steps ending at step {step + 1} — halting "
-                            f"instead of spinning on a diverged run")
-                else:
-                    consecutive_skips = 0
-            if (step + 1) % self.cfg.log_every == 0:
-                rate = (step + 1 - start) / max(time.monotonic() - t0, 1e-9)
-                row = {"step": step + 1, "loss": float(metrics["loss"]),
-                       "steps_per_s": rate}
-                row.update({k: float(v) for k, v in metrics.items()
-                            if k not in row})
-                if self._metrics_jit is not None:
-                    mb = (jax.tree.map(lambda x: x[0], batch)
-                          if self.cfg.microbatches > 1 else batch)
-                    extra = self._metrics_jit(
-                        state["params"], mb,
-                        jax.random.fold_in(base_rng, step))
-                    row.update({k: float(v) for k, v in extra.items()})
-                self.history.append(row)
-            if self.ckpt is not None and (step + 1) % self.cfg.ckpt_every == 0:
-                self.ckpt.save(int(state["step"]), state, blocking=False)
-                if on_checkpoint is not None:
-                    on_checkpoint(int(state["step"]))
-            if stop_after is not None and (step + 1 - start) >= stop_after:
-                break   # simulated preemption (tests)
+            with obs_trace.span("train.step", step=step + 1):
+                with obs_trace.span("train.data", step=step + 1):
+                    batch = next(it)
+                    spec = faults.fire("train.batch")
+                    if spec is not None and spec.kind == "nan":
+                        batch = _poison_batch(batch)
+                    if self._spmd:
+                        # cached shardings; no-op for loader-placed batches
+                        batch = self._place_batch(batch)
+                # dispatch only — the device work overlaps the next data span
+                # and is drained by the sync inside the train.log span
+                with obs_trace.span("train.compute", step=step + 1):
+                    state, metrics = self.step_fn(
+                        state, batch, jax.random.fold_in(base_rng, step))
+                self._last_step = step + 1
+                if self.cfg.halt_after_skips > 0:
+                    if int(metrics["skipped"]):
+                        consecutive_skips += 1
+                        self.skipped_steps += 1
+                        if consecutive_skips >= self.cfg.halt_after_skips:
+                            raise NonFiniteLossError(
+                                f"{consecutive_skips} consecutive non-finite "
+                                f"steps ending at step {step + 1} — halting "
+                                f"instead of spinning on a diverged run")
+                    else:
+                        consecutive_skips = 0
+                if (step + 1) % self.cfg.log_every == 0:
+                    with obs_trace.span("train.log", step=step + 1):
+                        rate = ((step + 1 - start)
+                                / max(time.monotonic() - t0, 1e-9))
+                        row = {"step": step + 1, "loss": float(metrics["loss"]),
+                               "steps_per_s": rate}
+                        row.update({k: float(v) for k, v in metrics.items()
+                                    if k not in row})
+                        if self._metrics_jit is not None:
+                            mb = (jax.tree.map(lambda x: x[0], batch)
+                                  if self.cfg.microbatches > 1 else batch)
+                            extra = self._metrics_jit(
+                                state["params"], mb,
+                                jax.random.fold_in(base_rng, step))
+                            row.update({k: float(v) for k, v in extra.items()})
+                        self.history.append(row)
+                    obs_export.maybe_emit("train.log")
+                if self.ckpt is not None and (step + 1) % self.cfg.ckpt_every == 0:
+                    with obs_trace.span("train.checkpoint", step=step + 1):
+                        self.ckpt.save(int(state["step"]), state, blocking=False)
+                        if on_checkpoint is not None:
+                            on_checkpoint(int(state["step"]))
+                if stop_after is not None and (step + 1 - start) >= stop_after:
+                    break   # simulated preemption (tests)
         if self.ckpt is not None:
             self.ckpt.wait()
         return state
