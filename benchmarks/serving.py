@@ -53,12 +53,12 @@ def _engine(spec, bundle, params, cache: bool = False) -> ScoringEngine:
     kw = {}
     if cache:
         halves = bundle.serve
-        kw = dict(user_fn=halves.user_fn,
+        kw = dict(user_fn=halves.user_repr,
                   score_from_user=lambda p, b, u:
                       halves.score_from_user(p, b, u)[:, 0],
                   cache=UserTowerCache(capacity=serve.cache_capacity))
     return ScoringEngine(params,
-                         lambda p, b: bundle.serve.score_fn(p, b)[:, 0],
+                         lambda p, b: bundle.serve.score(p, b)[:, 0],
                          policy=policy, **kw)
 
 
@@ -130,6 +130,83 @@ def _serve_bulk(spec, bundle, params, requests, smoke: bool) -> None:
          f"full_cache_batches={on.stats.n_full_cache_batches}")
 
 
+def _serve_incremental(smoke: bool) -> None:
+    """Incremental user-state serving vs full recompute (the tentpole of
+    the cached-prefix path): repeat users appending a few events per wave,
+    scored through the state store (O(new events)) and through the fused
+    forward (O(S)) at history windows 64/256/1024.
+
+    Only the hist-64 row is gated (CPU-stable); the longer windows — where
+    the O(S) vs O(new) gap is the point — are informational ``speedup_x``
+    rows (>= 2x at 1024 is the acceptance target).
+    """
+    from repro.configs.registry import scenario
+    from repro.core.joiner import ROOSample
+
+    def mk_req(uid, hist, items):
+        return ROOSample(
+            request_id=uid, user_id=uid,
+            ro_dense=np.full((4,), float(uid), np.float32),
+            ro_idlist=[uid % 7 + 1],
+            history_ids=list(hist),
+            history_actions=[h % 4 for h in hist],
+            item_ids=[int(i) for i in items],
+            item_dense=[np.full((4,), float(i), np.float32) for i in items],
+            item_idlist=[[int(i) % 5 + 1] for i in items],
+            labels=[{"click": 0.0, "view_sec": 0.0} for _ in items])
+
+    r = np.random.RandomState(0)
+    n_users, per_wave, n_waves = 8, 2, (4 if smoke else 12)
+    for hist in (64, 256, 1024):
+        spec = scenario("hstu-gr", {
+            "model.hist_len": hist, "batcher.hist_len": hist,
+            "model.n_items": 2000,
+            "serve.max_requests": n_users,
+            "serve.max_impressions": 16 * n_users,
+            "serve.incremental": True, "serve.state_capacity": 64})
+        note_scenario(spec)
+        full = ScoringEngine.from_scenario(
+            spec.with_overrides({"serve.incremental": False}))
+        inc = ScoringEngine.from_scenario(spec)   # same rng -> same params
+        # start each user short of the window cap so appended events extend
+        # the cached prefix instead of sliding the window out from under it
+        base = hist - 2 * per_wave * (n_waves + 2)
+        users = {u: [int(x) for x in r.randint(1, 2000, size=max(base, 4))]
+                 for u in range(n_users)}
+
+        def wave():
+            reqs = []
+            for u in users:
+                users[u] = users[u] + \
+                    [int(x) for x in r.randint(1, 2000, size=per_wave)]
+                reqs.append(mk_req(u, users[u],
+                                   r.randint(1, 2000, size=4)))
+            return reqs
+
+        for w in (wave(), wave()):       # warm: cold-fill + steady-state jit
+            full.score_requests(w)
+            inc.score_requests(w)
+        lat_full, lat_inc = [], []
+        for _ in range(n_waves):
+            reqs = wave()
+            t0 = time.perf_counter()
+            want = full.score_requests(reqs)
+            t1 = time.perf_counter()
+            got = inc.score_requests(reqs)
+            t2 = time.perf_counter()
+            lat_full.append((t1 - t0) * 1e3)
+            lat_inc.append((t2 - t1) * 1e3)
+            for a, b in zip(want, got):  # exact-parity guard (jnp backend)
+                np.testing.assert_array_equal(a, b)
+        p50_f, _ = _pcts(lat_full)
+        p50_i, p99_i = _pcts(lat_inc)
+        qps = n_users / (np.mean(lat_inc) / 1e3)
+        emit(f"serving_incremental_h{hist}", p50_i * 1e3,
+             f"speedup_x={p50_f / p50_i:.2f};full_p50_ms={p50_f:.1f};"
+             f"p50_ms={p50_i:.1f};p99_ms={p99_i:.1f};qps={qps:.0f};"
+             f"hit_rate={inc.state_store.stats.hit_rate:.2f}")
+
+
 def _serve_retrieval(spec, rng, requests, smoke: bool) -> None:
     from repro.models.two_tower import user_tower
     from repro.scenario.build import build_batcher_cfg, build_model
@@ -167,6 +244,7 @@ def run(smoke: bool = False) -> None:
                           product="product_b")
     _serve_p99(lsr, bundle, bundle.params, roo, smoke)
     _serve_bulk(lsr, bundle, bundle.params, roo, smoke)
+    _serve_incremental(smoke)
     ret = scenario("roo-retrieval")
     note_scenario(ret)
     _serve_retrieval(ret, rng, roo, smoke)

@@ -25,7 +25,7 @@ from typing import Dict, Optional, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core.masks import MaskSpec
+from repro.core.masks import MaskSpec, PrefixMaskSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,6 +136,70 @@ def hstu_attention_chunked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return out[:, :, :s, :] if s_pad != s else out
 
 
+def hstu_attention_prefix_chunked(q: jnp.ndarray, k: jnp.ndarray,
+                                  v: jnp.ndarray,
+                                  rab: Optional[jnp.ndarray],
+                                  spec: PrefixMaskSpec,
+                                  scale_len: int,
+                                  max_rel_pos: int = 128,
+                                  chunk: int = 128) -> jnp.ndarray:
+    """Blockwise cached-prefix attention — the `jnp-chunked` backend of
+    ``dispatch.hstu_attention_prefix``. Rows are [new events | targets]
+    (q: (B, H, R, Dqk)), columns the full K/V buffer [history cache |
+    targets] (k/v: (B, H, C, ·)). Numerics deliberately mirror
+    :func:`hstu_attention_chunked` op for op, so extend-from-empty
+    (prefix 0, n_new == n_hist) is bit-identical to full recompute.
+    """
+    b, h, n_rows, dqk = q.shape
+    dv = v.shape[-1]
+    n_cols = k.shape[2]
+    cq = min(chunk, n_rows)
+    r_pad = -(-n_rows // cq) * cq
+    qp = (jnp.pad(q, ((0, 0), (0, 0), (0, r_pad - n_rows), (0, 0)))
+          if r_pad != n_rows else q)
+    inv_d = 1.0 / math.sqrt(dqk)
+    inv_n = 1.0 / scale_len
+    n_hist, n_new = spec.n_hist, spec.n_new
+    pfx, nc, tc = spec.prefix_lengths, spec.new_counts, spec.target_counts
+    kf = k.astype(jnp.float32)
+    cols = jnp.arange(n_cols)
+    is_hk = cols < n_hist
+    valid_c = jnp.where(is_hk[None, :],
+                        cols[None, :] < (pfx + nc)[:, None],
+                        (cols[None, :] - n_hist) < tc[:, None])      # (B, C)
+
+    def one_chunk(ci):
+        q_c = jax.lax.dynamic_slice(
+            qp, (0, 0, ci * cq, 0), (b, h, cq, dqk)).astype(jnp.float32)
+        rows = ci * cq + jnp.arange(cq)
+        is_new = rows < n_new
+        row_pos = jnp.where(is_new[None, :], pfx[:, None] + rows[None, :],
+                            rows[None, :] + (n_hist - n_new))        # (B, cq)
+        scores = jnp.einsum("bhid,bhjd->bhij", q_c, kf,
+                            preferred_element_type=jnp.float32) * inv_d
+        if rab is not None:
+            delta = jnp.clip(row_pos[:, :, None] - cols[None, None, :],
+                             -max_rel_pos, max_rel_pos) + max_rel_pos
+            bias = jnp.moveaxis(jnp.take(rab, delta, axis=1), 0, 1)
+            scores = scores + bias.astype(scores.dtype)              # (B,H,cq,C)
+        struct = ((is_new[None, :, None] & is_hk[None, None, :]
+                   & (cols[None, None, :] <= row_pos[:, :, None]))
+                  | ((~is_new[:, None] & is_hk[None, :])
+                     | (~is_new[:, None] & ~is_hk[None, :]
+                        & ((rows - n_new)[:, None]
+                           == (cols - n_hist)[None, :])))[None])     # (B, cq, C)
+        valid_r = jnp.where(is_new[None, :], rows[None, :] < nc[:, None],
+                            (rows[None, :] - n_new) < tc[:, None])   # (B, cq)
+        m = struct & valid_r[:, :, None] & valid_c[:, None, :]
+        a = jax.nn.silu(scores) * inv_n
+        a = a * m[:, None].astype(a.dtype)
+        return jnp.einsum("bhij,bhjd->bhid", a.astype(v.dtype), v)
+
+    out = jax.lax.map(one_chunk, jnp.arange(r_pad // cq))
+    out = jnp.moveaxis(out, 0, 2).reshape(b, h, r_pad, dv)
+    return out[:, :, :n_rows, :] if r_pad != n_rows else out
+
+
 def hstu_layer_apply(params: Dict, cfg: HSTUConfig, x: jnp.ndarray,
                      mask: Union[jnp.ndarray, MaskSpec],
                      backend: Optional[str] = None) -> jnp.ndarray:
@@ -188,6 +252,82 @@ def hstu_apply(params: Dict, cfg: HSTUConfig, x: jnp.ndarray,
     for layer in params["layers"]:
         x = hstu_layer_apply(layer, cfg, x, mask, backend=backend)
     return x
+
+
+def hstu_prefix_layer_apply(params: Dict, cfg: HSTUConfig, x: jnp.ndarray,
+                            k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                            spec: PrefixMaskSpec, scale_len: int,
+                            backend: Optional[str] = None):
+    """One HSTU layer over [new events | targets] rows against a per-user
+    K/V cache (incremental serving).
+
+    x: (B, n_new + m, d); k_cache: (B, n_hist, H, dqk); v_cache:
+    (B, n_hist, H, dv). The layer projects the rows exactly as
+    :func:`hstu_layer_apply` (row-wise ops are row-count invariant, which is
+    what makes the split bit-exact), scatters the valid new rows' K/V into
+    the cache at ``prefix + r``, and attends rows against
+    [cache | target K/V]. Returns ``(x_out, k_cache', v_cache')`` — the
+    updated caches are this layer's state for the *next* request.
+    """
+    b, r_len, d = x.shape
+    h, dqk, dv = cfg.n_heads, cfg.d_qk, cfg.d_v
+    n_hist, n_new = spec.n_hist, spec.n_new
+    xn = _ln(x, cfg.eps)
+    uvqk = jax.nn.silu(xn @ params["w_uvqk"] + params["b_uvqk"])
+    u, v, q, k = jnp.split(uvqk, [h * dv, 2 * h * dv, 2 * h * dv + h * dqk],
+                           axis=-1)
+    q = q.reshape(b, r_len, h, dqk).transpose(0, 2, 1, 3)
+    k = k.reshape(b, r_len, h, dqk)
+    v = v.reshape(b, r_len, h, dv)
+
+    # Scatter valid new rows into the cache; invalid rows park at the extra
+    # slot n_hist, which is cropped — garbage never lands in user state.
+    rr = jnp.arange(n_new)
+    pos = jnp.where(rr[None, :] < spec.new_counts[:, None],
+                    spec.prefix_lengths[:, None] + rr[None, :], n_hist)
+    bidx = jnp.arange(b)[:, None]
+    kc = jnp.concatenate([k_cache, jnp.zeros((b, 1, h, dqk), k_cache.dtype)],
+                         axis=1)
+    kc = kc.at[bidx, pos].set(k[:, :n_new], mode="drop")[:, :n_hist]
+    vc = jnp.concatenate([v_cache, jnp.zeros((b, 1, h, dv), v_cache.dtype)],
+                         axis=1)
+    vc = vc.at[bidx, pos].set(v[:, :n_new], mode="drop")[:, :n_hist]
+
+    k_cols = jnp.concatenate([kc, k[:, n_new:]], axis=1).transpose(0, 2, 1, 3)
+    v_cols = jnp.concatenate([vc, v[:, n_new:]], axis=1).transpose(0, 2, 1, 3)
+
+    from repro.kernels import dispatch
+    rab = params["rab"] if cfg.use_rab else None
+    av = dispatch.hstu_attention_prefix(
+        q, k_cols, v_cols, rab, spec, backend=backend or cfg.attn_backend,
+        scale_len=scale_len, max_rel_pos=cfg.max_rel_pos)
+
+    av = av.transpose(0, 2, 1, 3).reshape(b, r_len, h * dv)
+    y = _ln(av, cfg.eps) * params["ln_scale"] + params["ln_bias"]
+    y = (y * u) @ params["w_o"]
+    return x + y, kc, vc
+
+
+def hstu_prefix_apply(params: Dict, cfg: HSTUConfig, x: jnp.ndarray,
+                      state_k: jnp.ndarray, state_v: jnp.ndarray,
+                      spec: PrefixMaskSpec, scale_len: int,
+                      backend: Optional[str] = None):
+    """Incremental counterpart of :func:`hstu_apply`.
+
+    x: (B, n_new + m, d) rows [new events | targets]; state_k:
+    (B, n_layers, n_hist, H, dqk); state_v: (B, n_layers, n_hist, H, dv).
+    Returns ``(x_out, state_k', state_v')`` with the per-layer caches
+    extended by this request's valid new events.
+    """
+    x = _ln(x, cfg.eps) * params["in_ln_scale"] + params["in_ln_bias"]
+    ks, vs = [], []
+    for li, layer in enumerate(params["layers"]):
+        x, kc, vc = hstu_prefix_layer_apply(
+            layer, cfg, x, state_k[:, li], state_v[:, li], spec, scale_len,
+            backend=backend)
+        ks.append(kc)
+        vs.append(vc)
+    return x, jnp.stack(ks, axis=1), jnp.stack(vs, axis=1)
 
 
 def hstu_flops(cfg: HSTUConfig, batch: int, seq: int) -> int:

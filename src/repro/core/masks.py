@@ -81,6 +81,72 @@ jax.tree_util.register_pytree_node(
     lambda n_hist, children: MaskSpec(n_hist, *children))
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class PrefixMaskSpec:
+    """ROO mask for the cached-prefix (incremental) attention layout.
+
+    Rows are ``[e_0 .. e_{n_new-1} | t_0 .. t_{m-1}]`` — the *new* history
+    events of this request followed by its target slots. Columns are the
+    full key/value buffer ``[h_0 .. h_{n_hist-1} | t_0 .. t_{m-1}]`` — the
+    per-user K/V cache (prefix already resident, new events scattered in at
+    ``prefix_lengths + r``) followed by the same target slots. New event r
+    sits at absolute history position ``prefix_lengths[b] + r``, so:
+
+      * new event → history  : causal on absolute positions
+        (col j allowed iff ``j <= prefix + r``);
+      * new event → target   : never (history rows don't see targets);
+      * target → history     : full valid history (``j < prefix + n_new``);
+      * target → target      : diagonal only.
+
+    With ``prefix_lengths == 0`` and ``n_new == n_hist`` this is exactly the
+    :class:`MaskSpec` ROO mask — extend-from-empty *is* full recompute, which
+    is what makes one parity-tested code path serve both cases.
+    """
+    n_hist: int                   # K/V cache capacity (history columns)
+    n_new: int                    # padded new-event row count
+    prefix_lengths: jnp.ndarray   # (B,) events already in the cache
+    new_counts: jnp.ndarray       # (B,) valid new events this request
+    target_counts: jnp.ndarray    # (B,) valid targets this request
+
+    def dense(self, n_rows: int, n_cols: int) -> jnp.ndarray:
+        """Materialize the (B, n_rows, n_cols) bool mask (oracle path)."""
+        r = jnp.arange(n_rows)
+        j = jnp.arange(n_cols)
+        is_new_r = r < self.n_new                                   # (R,)
+        is_hist_c = j < self.n_hist                                 # (C,)
+        pfx = self.prefix_lengths[:, None]                          # (B, 1)
+        row_pos = jnp.where(is_new_r[None, :], pfx + r[None, :],
+                            r[None, :] + (self.n_hist - self.n_new))  # (B, R)
+        new_hist = (is_new_r[None, :, None] & is_hist_c[None, None, :]
+                    & (j[None, None, :] <= row_pos[:, :, None]))
+        tgt_hist = (~is_new_r)[:, None] & is_hist_c[None, :]        # (R, C)
+        tgt_diag = ((~is_new_r)[:, None] & (~is_hist_c)[None, :]
+                    & ((r - self.n_new)[:, None] == (j - self.n_hist)[None, :]))
+        struct = new_hist | (tgt_hist | tgt_diag)[None]             # (B, R, C)
+        valid_r = jnp.where(is_new_r[None, :],
+                            r[None, :] < self.new_counts[:, None],
+                            (r[None, :] - self.n_new) < self.target_counts[:, None])
+        valid_c = jnp.where(is_hist_c[None, :],
+                            j[None, :] < (self.prefix_lengths + self.new_counts)[:, None],
+                            (j[None, :] - self.n_hist) < self.target_counts[:, None])
+        return struct & valid_r[:, :, None] & valid_c[:, None, :]
+
+
+jax.tree_util.register_pytree_node(
+    PrefixMaskSpec,
+    lambda m: ((m.prefix_lengths, m.new_counts, m.target_counts),
+               (m.n_hist, m.n_new)),
+    lambda aux, children: PrefixMaskSpec(aux[0], aux[1], *children))
+
+
+def prefix_spec(prefix_lengths: jnp.ndarray, new_counts: jnp.ndarray,
+                target_counts: jnp.ndarray, n_hist: int,
+                n_new: int) -> PrefixMaskSpec:
+    """Spec for the cached-prefix [new events | targets] row layout."""
+    return PrefixMaskSpec(n_hist, n_new, prefix_lengths, new_counts,
+                          target_counts)
+
+
 def roo_spec(hist_lengths: jnp.ndarray, target_counts: jnp.ndarray,
              n_hist: int) -> MaskSpec:
     """Spec for the [history | targets] ROO sequence."""

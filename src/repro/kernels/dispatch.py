@@ -38,7 +38,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.masks import MaskSpec
+from repro.core.masks import MaskSpec, PrefixMaskSpec
 from repro.scenario.knobs import UNSET, Knob
 
 BACKENDS = ("pallas", "pallas-interpret", "jnp-chunked", "jnp-dense")
@@ -124,3 +124,42 @@ def hstu_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     from repro.kernels.ref import hstu_attention_ref
     return hstu_attention_ref(q, k, v, rab, spec.n_hist, spec.hist_lengths,
                               spec.target_counts, max_rel_pos)
+
+
+def hstu_attention_prefix(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                          rab: Optional[jnp.ndarray], spec: PrefixMaskSpec,
+                          backend: Optional[str] = None, *,
+                          scale_len: int,
+                          max_rel_pos: int = 128,
+                          block_q: int = 128,
+                          block_k: int = 128) -> jnp.ndarray:
+    """Cached-prefix HSTU attention (incremental serving; forward only).
+
+    Rows are [new events | targets] (q: (B, H, n_new + m, Dqk)); columns the
+    full K/V buffer [history cache | targets] (k, v: (B, H, n_hist + m, ·)).
+    ``spec`` carries the per-request prefix/new/target counts; ``scale_len``
+    pins the 1/n normalizer to the equivalent full-sequence length so the
+    incremental path is numerically the full ROO forward restricted to the
+    new rows. Same backend ladder as :func:`hstu_attention`; with
+    ``prefix_lengths == 0`` and ``n_new == n_hist`` every backend computes
+    exactly its full-recompute counterpart (tests/test_incremental.py).
+    """
+    be = resolve_backend(backend)
+    if be in ("pallas", "pallas-interpret"):
+        from repro.kernels.hstu_attention import (
+            hstu_attention_prefix as _pallas)
+        return _pallas(q, k, v, rab, spec.n_hist, spec.n_new,
+                       spec.prefix_lengths, spec.new_counts,
+                       spec.target_counts, scale_len, max_rel_pos,
+                       block_q, block_k,
+                       interpret=(be == "pallas-interpret"))
+    if be == "jnp-chunked":
+        from repro.core.hstu import hstu_attention_prefix_chunked
+        return hstu_attention_prefix_chunked(
+            q, k, v, rab, spec, scale_len,
+            max_rel_pos=max_rel_pos, chunk=block_q)
+    from repro.kernels.ref import hstu_attention_prefix_ref
+    return hstu_attention_prefix_ref(q, k, v, rab, spec.n_hist, spec.n_new,
+                                     spec.prefix_lengths, spec.new_counts,
+                                     spec.target_counts, scale_len,
+                                     max_rel_pos)

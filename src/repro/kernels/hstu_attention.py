@@ -382,3 +382,131 @@ def hstu_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     out = _hstu_fused(statics, hist_lengths.astype(jnp.int32),
                       target_counts.astype(jnp.int32), q, k, v, rab)
     return out[:, :, :s, :] if s_pad != s else out
+
+
+# ---------------------------------------------------------------------------
+# Cached-prefix (incremental serving) forward kernel
+# ---------------------------------------------------------------------------
+
+
+def _prefix_fwd_kernel(pfx_ref, nc_ref, tc_ref,      # scalar prefetch: (B,)x3
+                       q_ref, k_ref, v_ref, rab_ref,
+                       o_ref, *, n_hist: int, n_new: int, scale_len: int,
+                       n_heads: int, bq: int, bk: int, max_rel: int,
+                       use_rab: bool):
+    """One (bq, bk) tile of cached-prefix attention. Rows are
+    [new events | targets]; columns the full K/V buffer [history cache |
+    targets]. New event r sits at absolute position ``prefix + r`` — the
+    mask and rab deltas are generated in-kernel from that mapping, so the
+    asymmetric row/column indexing never materializes in HBM."""
+    bh = pl.program_id(0)
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    b = bh // n_heads
+
+    q = q_ref[0].astype(jnp.float32)                     # (bq, dqk)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, dqk)
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (bq, bk)
+    scores = scores * (1.0 / math.sqrt(q.shape[-1]))
+
+    rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    pfx = pfx_ref[b]
+    nc = nc_ref[b]
+    tc = tc_ref[b]
+    is_new = rows < n_new
+    row_pos = jnp.where(is_new, pfx + rows, rows + (n_hist - n_new))
+    if use_rab:
+        delta = jnp.clip(row_pos - cols, -max_rel, max_rel) + max_rel
+        bias = jnp.take(rab_ref[0], delta.reshape(-1), axis=0)
+        scores = scores + bias.reshape(bq, bk)
+
+    is_hk = cols < n_hist
+    struct = ((is_new & is_hk & (cols <= row_pos))
+              | ((~is_new) & is_hk)
+              | ((~is_new) & (~is_hk) & ((rows - n_new) == (cols - n_hist))))
+    valid_r = jnp.where(is_new, rows < nc, (rows - n_new) < tc)
+    valid_c = jnp.where(is_hk, cols < pfx + nc, (cols - n_hist) < tc)
+    mask = struct & valid_r & valid_c
+
+    a = jax.nn.silu(scores) * (1.0 / scale_len)
+    a = jnp.where(mask, a, 0.0)
+    v = v_ref[0].astype(jnp.float32)                     # (bk, dv)
+    part = jax.lax.dot_general(a, v, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+
+    o_ref[0] += part.astype(o_ref.dtype)
+
+
+def hstu_attention_prefix(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                          rab: Optional[jnp.ndarray],
+                          n_hist: int, n_new: int,
+                          prefix_lengths: jnp.ndarray,
+                          new_counts: jnp.ndarray,
+                          target_counts: jnp.ndarray,
+                          scale_len: int,
+                          max_rel_pos: int = 128,
+                          block_q: int = 128, block_k: int = 128,
+                          interpret: bool = True) -> jnp.ndarray:
+    """Cached-prefix HSTU attention (forward only — a serving path).
+
+    q: (B, H, n_new + m, Dqk) — new history events then target slots;
+    k, v: (B, H, n_hist + m, ·) — the per-user K/V cache (new events already
+    scattered at ``prefix_lengths + r``) then the target slots. ``scale_len``
+    pins the 1/n normalizer to the equivalent full-sequence length
+    (n_hist + m_targets), so extend-only calls (m == 0 rows) normalize
+    identically to extend-and-score. Rows and columns are padded to their
+    block lattices independently and cropped; padded slots read as
+    out-of-range targets, which the validity mask zeroes.
+    Returns (B, H, n_new + m, Dv).
+    """
+    b, h, n_rows, dqk = q.shape
+    n_cols = k.shape[2]
+    dv = v.shape[-1]
+    bq = min(block_q, n_rows)
+    bk = min(block_k, n_cols)
+    r_pad = -(-n_rows // bq) * bq
+    c_pad = -(-n_cols // bk) * bk
+    use_rab = rab is not None
+    if rab is None:
+        rab = jnp.zeros((h, 2 * max_rel_pos + 1), q.dtype)
+    if r_pad != n_rows:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, r_pad - n_rows), (0, 0)))
+    if c_pad != n_cols:
+        pad = ((0, 0), (0, 0), (0, c_pad - n_cols), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    qf = q.reshape(b * h, r_pad, dqk)
+    kf = k.reshape(b * h, c_pad, dqk)
+    vf = v.reshape(b * h, c_pad, dv)
+    nrab = rab.shape[-1]
+    rabf = jnp.broadcast_to(rab[None], (b, h, nrab)).reshape(b * h, nrab)
+
+    kernel = functools.partial(
+        _prefix_fwd_kernel, n_hist=n_hist, n_new=n_new, scale_len=scale_len,
+        n_heads=h, bq=bq, bk=bk, max_rel=max_rel_pos, use_rab=use_rab)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(b * h, r_pad // bq, c_pad // bk),
+            in_specs=[
+                pl.BlockSpec((1, bq, dqk), lambda bh, qi, ki, *s: (bh, qi, 0)),
+                pl.BlockSpec((1, bk, dqk), lambda bh, qi, ki, *s: (bh, ki, 0)),
+                pl.BlockSpec((1, bk, dv), lambda bh, qi, ki, *s: (bh, ki, 0)),
+                pl.BlockSpec((1, nrab), lambda bh, qi, ki, *s: (bh, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bq, dv),
+                                   lambda bh, qi, ki, *s: (bh, qi, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b * h, r_pad, dv), v.dtype),
+        interpret=interpret,
+    )(prefix_lengths.astype(jnp.int32), new_counts.astype(jnp.int32),
+      target_counts.astype(jnp.int32), qf, kf, vf, rabf)
+    out = out.reshape(b, h, r_pad, dv)
+    return out[:, :, :n_rows, :] if r_pad != n_rows else out

@@ -47,6 +47,49 @@ def hstu_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return jnp.einsum("bhij,bhjd->bhid", a.astype(v.dtype), v)
 
 
+def hstu_attention_prefix_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                              rab: jnp.ndarray | None,
+                              n_hist: int, n_new: int,
+                              prefix_lengths: jnp.ndarray,
+                              new_counts: jnp.ndarray,
+                              target_counts: jnp.ndarray,
+                              scale_len: int,
+                              max_rel_pos: int = 128) -> jnp.ndarray:
+    """Cached-prefix HSTU attention (dense oracle).
+
+    Rows are [new events | targets]: q: (B, H, n_new + m, Dqk). Columns are
+    the full K/V buffer [history cache | targets]: k: (B, H, n_hist + m, Dqk),
+    v: (B, H, n_hist + m, Dv). New event r sits at absolute history position
+    ``prefix_lengths[b] + r``; ``scale_len`` is the 1/n normalizer of the
+    equivalent full sequence (n_hist + m_targets), pinned by the caller so
+    extend-only and extend-and-score calls normalize identically.
+    Returns (B, H, n_new + m, Dv).
+    """
+    from repro.core.masks import PrefixMaskSpec
+
+    b, h, n_rows, dqk = q.shape
+    n_cols = k.shape[2]
+    scores = jnp.einsum("bhid,bhjd->bhij", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(dqk, jnp.float32))
+    if rab is not None:
+        r = jnp.arange(n_rows)
+        j = jnp.arange(n_cols)
+        row_pos = jnp.where((r < n_new)[None, :],
+                            prefix_lengths[:, None] + r[None, :],
+                            r[None, :] + (n_hist - n_new))           # (B, R)
+        delta = jnp.clip(row_pos[:, :, None] - j[None, None, :],
+                         -max_rel_pos, max_rel_pos) + max_rel_pos    # (B, R, C)
+        bias = jnp.moveaxis(jnp.take(rab, delta, axis=1), 0, 1)      # (B, H, R, C)
+        scores = scores + bias.astype(scores.dtype)
+    spec = PrefixMaskSpec(n_hist, n_new, prefix_lengths, new_counts,
+                          target_counts)
+    mask = spec.dense(n_rows, n_cols)                                # (B, R, C)
+    a = jax.nn.silu(scores) / jnp.asarray(scale_len, jnp.float32)
+    a = a * mask[:, None].astype(a.dtype)
+    return jnp.einsum("bhij,bhjd->bhid", a.astype(v.dtype), v)
+
+
 def embedding_bag_ref(table: jnp.ndarray, ids: jnp.ndarray,
                       lengths: jnp.ndarray,
                       pooling: str = "sum") -> jnp.ndarray:

@@ -14,13 +14,14 @@ hstu_gr config instantiates it at production width.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.hstu import HSTUConfig, hstu_apply, hstu_init
-from repro.core.masks import causal_spec
+from repro.core.hstu import (HSTUConfig, hstu_apply, hstu_init,
+                             hstu_prefix_apply)
+from repro.core.masks import causal_spec, prefix_spec
 from repro.core.roo_batch import ROOBatch
 from repro.core.sequence import (ROOSequenceConfig, encode_roo,
                                  gather_targets_to_ro, scatter_targets_to_nro)
@@ -92,6 +93,94 @@ def gr_ranking_logits(params: Dict, cfg: GRConfig, batch: ROOBatch,
     return gr_ranking_logits_from_history(
         params, cfg, batch, gr_history_repr(params, cfg, batch, plan=plan),
         plan=plan)
+
+
+class GRUserState(NamedTuple):
+    """Per-user incremental serving state: the per-layer history K/V cache.
+
+    Unbatched (as stored per user): k (n_layers, hist_len, H, dqk),
+    v (n_layers, hist_len, H, dv), length () int32 — how many history events
+    are resident. The serving store stacks these along a leading batch axis.
+    """
+    k: jnp.ndarray
+    v: jnp.ndarray
+    length: jnp.ndarray
+
+
+def gr_state_init(cfg: GRConfig, dtype=jnp.float32) -> GRUserState:
+    """Empty (zero-length) user state — extend-from-empty through the prefix
+    path computes exactly the full-recompute forward."""
+    h = cfg.hstu
+    return GRUserState(
+        k=jnp.zeros((h.n_layers, cfg.hist_len, h.n_heads, h.d_qk), dtype),
+        v=jnp.zeros((h.n_layers, cfg.hist_len, h.n_heads, h.d_v), dtype),
+        length=jnp.zeros((), jnp.int32))
+
+
+def _gr_new_event_emb(params: Dict, cfg: GRConfig, batch: ROOBatch,
+                      prefix: jnp.ndarray, n_new: int, plan=None):
+    """Embed the n_new not-yet-cached history events of each request (row r
+    of request b is history slot ``prefix[b] + r``). Returns
+    (emb (B_RO, n_new, d), new_counts (B_RO,))."""
+    n_hist = cfg.hist_len
+    lengths = jnp.minimum(batch.history_lengths, n_hist).astype(jnp.int32)
+    new_counts = jnp.maximum(lengths - prefix, 0)
+    ridx = jnp.minimum(prefix[:, None] + jnp.arange(n_new)[None, :],
+                       n_hist - 1)
+    ids = jnp.take_along_axis(batch.history_ids[:, :n_hist], ridx, axis=1)
+    acts = jnp.take_along_axis(batch.history_actions[:, :n_hist], ridx,
+                               axis=1)
+    e = ec.seq_lookup(params["item_emb"], ids, vocab=cfg.n_items, plan=plan)
+    a = ec.seq_lookup(params["act_emb"], acts, vocab=4)
+    return e + a, new_counts
+
+
+def gr_score_from_state(params: Dict, cfg: GRConfig, batch: ROOBatch,
+                        state: GRUserState, *, n_new: int,
+                        plan=None):
+    """Incremental GR ranking: score the request's targets by attending
+    [new events | targets] against the per-user K/V cache.
+
+    ``state`` is a batched :class:`GRUserState` (leading B_RO axis);
+    ``n_new`` is the static new-event row budget (>= every request's
+    uncached-event count; extra rows are masked). With zero-length state and
+    ``n_new == cfg.hist_len`` this computes exactly
+    :func:`gr_ranking_logits` — the unified fallback path. Returns
+    ``(logits (B_NRO, n_tasks), new_state)``.
+    """
+    prefix = state.length.astype(jnp.int32)
+    emb, new_counts = _gr_new_event_emb(params, cfg, batch, prefix, n_new,
+                                        plan=plan)
+    tgt_nro = ec.row_lookup(params["item_emb"], batch.item_ids,
+                            vocab=cfg.n_items, plan=plan)
+    tgt_ro = gather_targets_to_ro(tgt_nro, batch, cfg.m_targets)
+    x = jnp.concatenate([emb, tgt_ro], axis=1)       # (B_RO, n_new + m, d)
+    spec = prefix_spec(prefix, new_counts, batch.num_impressions,
+                       cfg.hist_len, n_new)
+    scale_len = cfg.hist_len + cfg.m_targets
+    x, ks, vs = hstu_prefix_apply(params["hstu"], cfg.hstu, x,
+                                  state.k, state.v, spec, scale_len)
+    feats = scatter_targets_to_nro(x[:, n_new:, :], batch, cfg.m_targets)
+    logits = mlp_apply(params["task_head"], feats)
+    return logits, GRUserState(ks, vs, prefix + new_counts)
+
+
+def gr_extend_user_state(params: Dict, cfg: GRConfig, batch: ROOBatch,
+                         state: GRUserState, *, n_new: int,
+                         plan=None) -> GRUserState:
+    """Extend the per-user K/V cache with the request's new events without
+    scoring any targets (prewarm / write-only traffic). The 1/n scale stays
+    pinned to ``hist_len + m_targets``, so the resulting cache is bit-equal
+    to the one :func:`gr_score_from_state` would have produced."""
+    prefix = state.length.astype(jnp.int32)
+    emb, new_counts = _gr_new_event_emb(params, cfg, batch, prefix, n_new,
+                                        plan=plan)
+    spec = prefix_spec(prefix, new_counts,
+                       jnp.zeros_like(new_counts), cfg.hist_len, n_new)
+    scale_len = cfg.hist_len + cfg.m_targets
+    _, ks, vs = hstu_prefix_apply(params["hstu"], cfg.hstu, emb,
+                                  state.k, state.v, spec, scale_len)
+    return GRUserState(ks, vs, prefix + new_counts)
 
 
 def gr_table_ids(cfg: GRConfig, batch: ROOBatch) -> Dict:

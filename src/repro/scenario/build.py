@@ -26,6 +26,9 @@ import os
 from typing import Any, Callable, Dict, List, NamedTuple, Optional
 
 from repro.scenario.spec import ScenarioSpec, ScenarioValidationError
+# ServeAdapter moved to repro.serve.adapter in PR 9 (first-class serving
+# interface); re-exported here because PRs 2-8 imported it from this module
+from repro.serve.adapter import ServeAdapter  # noqa: F401 (re-export)
 
 # archs the recsys scenario surface covers (dry-run-only archs excluded)
 RECSYS_ARCHS = ("roo-lsr", "roo-esr", "roo-retrieval", "hstu-gr",
@@ -34,13 +37,6 @@ RECSYS_ARCHS = ("roo-lsr", "roo-esr", "roo-retrieval", "hstu-gr",
 # archs whose losses route embedding lookups through a sharding plan —
 # the only ones that may train under --mesh / train.mesh
 PLAN_ARCHS = ("roo-lsr", "hstu-gr")
-
-
-class ServeAdapter(NamedTuple):
-    """Model halves in the ScoringEngine calling convention."""
-    score_fn: Callable                       # (params, batch) -> scores
-    user_fn: Optional[Callable] = None       # (params, batch) -> (B_RO, ...)
-    score_from_user: Optional[Callable] = None
 
 
 class ModelBundle(NamedTuple):
@@ -164,9 +160,10 @@ def build_model(spec: ScenarioSpec, rng, plan=None,
             _ne_metrics(lambda p, b: (lsr_logits_roo(p, cfg, b, plan=plan)[:, 0],
                                       b.labels[:, 0], b.impression_mask())),
             ServeAdapter(
-                lambda p, b: lsr_logits_roo(p, cfg, b),
-                lambda p, b: lsr_user_repr(p, cfg, b),
-                lambda p, b, u: lsr_logits_from_user(p, cfg, b, u)))
+                score=lambda p, b: lsr_logits_roo(p, cfg, b),
+                user_repr=lambda p, b: lsr_user_repr(p, cfg, b),
+                score_from_user=lambda p, b, u: lsr_logits_from_user(
+                    p, cfg, b, u)))
     if arch == "roo-esr":
         from repro.models.two_tower import (esr_logits_from_user,
                                             esr_logits_roo, esr_loss_roo,
@@ -180,9 +177,10 @@ def build_model(spec: ScenarioSpec, rng, plan=None,
             _ne_metrics(lambda p, b: (esr_logits_roo(p, cfg, b),
                                       b.labels[:, 0], b.impression_mask())),
             ServeAdapter(
-                lambda p, b: esr_logits_roo(p, cfg, b),
-                lambda p, b: user_tower(p, cfg, b),
-                lambda p, b, u: esr_logits_from_user(p, cfg, b, u)))
+                score=lambda p, b: esr_logits_roo(p, cfg, b),
+                user_repr=lambda p, b: user_tower(p, cfg, b),
+                score_from_user=lambda p, b, u: esr_logits_from_user(
+                    p, cfg, b, u)))
     if arch == "roo-retrieval":
         from repro.models.two_tower import (item_tower, retrieval_loss_roo,
                                             two_tower_init,
@@ -199,14 +197,16 @@ def build_model(spec: ScenarioSpec, rng, plan=None,
             arch, cfg, two_tower_init(rng, cfg), loss,
             sparse_vag(loss, lambda b: two_tower_table_ids(cfg, b)), None,
             ServeAdapter(
-                lambda p, b: _fanout_scores(p, b, user_tower(p, cfg, b)),
-                lambda p, b: user_tower(p, cfg, b),
-                _fanout_scores))
+                score=lambda p, b: _fanout_scores(p, b,
+                                                  user_tower(p, cfg, b)),
+                user_repr=lambda p, b: user_tower(p, cfg, b),
+                score_from_user=_fanout_scores))
     if arch == "hstu-gr":
-        from repro.models.gr import (gr_history_repr, gr_init,
-                                     gr_ranking_logits,
+        from repro.models.gr import (gr_extend_user_state, gr_history_repr,
+                                     gr_init, gr_ranking_logits,
                                      gr_ranking_logits_from_history,
-                                     gr_ranking_loss, gr_table_ids)
+                                     gr_ranking_loss, gr_score_from_state,
+                                     gr_state_init, gr_table_ids)
         cfg = dataclasses.replace(
             rm.gr_config(hist_len=m.hist_len, m_targets=m.m_targets),
             n_items=m.n_items)
@@ -218,9 +218,16 @@ def build_model(spec: ScenarioSpec, rng, plan=None,
                 gr_ranking_logits(p, cfg, b, plan=plan)[:, 0],
                 b.labels[:, 0], b.impression_mask())),
             ServeAdapter(
-                lambda p, b: gr_ranking_logits(p, cfg, b),
-                lambda p, b: gr_history_repr(p, cfg, b),
-                lambda p, b, h: gr_ranking_logits_from_history(p, cfg, b, h)))
+                score=lambda p, b: gr_ranking_logits(p, cfg, b),
+                user_repr=lambda p, b: gr_history_repr(p, cfg, b),
+                score_from_user=lambda p, b, h:
+                    gr_ranking_logits_from_history(p, cfg, b, h),
+                init_user_state=lambda: gr_state_init(cfg),
+                extend_user_state=lambda p, b, s, *, n_new:
+                    gr_extend_user_state(p, cfg, b, s, n_new=n_new),
+                score_from_state=lambda p, b, s, *, n_new:
+                    gr_score_from_state(p, cfg, b, s, n_new=n_new),
+                state_hist_len=cfg.hist_len))
     if arch == "mind":
         from repro.models.mind import (MINDConfig, mind_init, mind_loss,
                                        mind_table_ids, score_candidates_roo)
@@ -229,7 +236,7 @@ def build_model(spec: ScenarioSpec, rng, plan=None,
         return ModelBundle(
             arch, cfg, mind_init(rng, cfg), loss,
             sparse_vag(loss, lambda b: mind_table_ids(cfg, b)), None,
-            ServeAdapter(lambda p, b: score_candidates_roo(p, cfg, b)))
+            ServeAdapter(score=lambda p, b: score_candidates_roo(p, cfg, b)))
     if arch == "bert4rec":
         from repro.models.bert4rec import (BERT4RecConfig, bert4rec_init,
                                            bert4rec_loss,
@@ -242,7 +249,7 @@ def build_model(spec: ScenarioSpec, rng, plan=None,
         return ModelBundle(
             arch, cfg, bert4rec_init(rng, cfg),
             lambda p, b, r: bert4rec_loss(p, cfg, b, r), None, None,
-            ServeAdapter(lambda p, b: score_candidates_roo(p, cfg, b)))
+            ServeAdapter(score=lambda p, b: score_candidates_roo(p, cfg, b)))
     if arch == "dien":
         from repro.models.din_dien import (DIENConfig, dien_init,
                                            dien_logits_roo, dien_loss,
@@ -254,7 +261,7 @@ def build_model(spec: ScenarioSpec, rng, plan=None,
             sparse_vag(loss, lambda b: dien_table_ids(cfg, b)),
             _ne_metrics(lambda p, b: (dien_logits_roo(p, cfg, b),
                                       b.labels[:, 0], b.impression_mask())),
-            ServeAdapter(lambda p, b: dien_logits_roo(p, cfg, b)))
+            ServeAdapter(score=lambda p, b: dien_logits_roo(p, cfg, b)))
     # dlrm-mlperf: MLPerf-shaped at reduced scale (the full vocabs are
     # hundreds of millions of rows — dry-run cells only). Field-dict
     # batches, not ROOBatch, so it is synthetic-data-only + not servable
@@ -544,7 +551,7 @@ def engine_from_scenario(spec: ScenarioSpec, params=None, rng_seed: int = 0,
 
     from repro.serve.bucketing import BucketLadder
     from repro.serve.engine import EnginePolicy, ScoringEngine
-    from repro.serve.user_cache import UserTowerCache
+    from repro.serve.user_cache import UserStateStore, UserTowerCache
 
     spec.validate().apply()
     bundle = build_model(spec, jax.random.PRNGKey(rng_seed))
@@ -567,18 +574,34 @@ def engine_from_scenario(spec: ScenarioSpec, params=None, rng_seed: int = 0,
               BucketLadder.fixed(sv.max_requests, sv.max_impressions))
     adapter = bundle.serve
     cache = None
+    state_store = None
     if sv.cache_user_tower:
-        if adapter.user_fn is None:
+        if not adapter.supports_user_cache:
             raise ScenarioValidationError(
                 f"scenario {spec.name!r}: serve.cache_user_tower needs "
                 f"split user/score entry points; {spec.model.arch} has a "
                 f"fused forward only")
         cache = UserTowerCache(sv.cache_capacity)
+    if sv.incremental:
+        if not adapter.supports_incremental:
+            raise ScenarioValidationError(
+                f"scenario {spec.name!r}: serve.incremental needs the "
+                f"stateful adapter hooks (init_user_state/score_from_state);"
+                f" {spec.model.arch} serves statelessly")
+        if adapter.state_hist_len != spec.batcher.hist_len:
+            raise ScenarioValidationError(
+                f"scenario {spec.name!r}: serve.incremental needs the "
+                f"model's state window to equal the batcher window "
+                f"(model.hist_len {adapter.state_hist_len} != "
+                f"batcher.hist_len {spec.batcher.hist_len}); otherwise "
+                f"'prefix of the served history' is ill-defined")
+        state_store = UserStateStore(sv.state_capacity)
     return ScoringEngine(
         params if params is not None else bundle.params,
-        adapter.score_fn, policy=policy, ladder=ladder,
-        user_fn=adapter.user_fn if cache is not None else None,
+        policy=policy, ladder=ladder, adapter=adapter,
+        user_fn=adapter.user_repr if cache is not None else None,
         score_from_user=(adapter.score_from_user
                          if cache is not None else None),
-        cache=cache, attn_backend=spec.knobs.attn_backend,
+        cache=cache, state_store=state_store,
+        attn_backend=spec.knobs.attn_backend,
         clock=clock if clock is not None else _time.monotonic)

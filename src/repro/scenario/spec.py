@@ -111,6 +111,8 @@ class ServeSpec:
     bucketed: bool = True
     cache_user_tower: bool = False
     cache_capacity: int = 4096
+    incremental: bool = False     # per-user K/V state, O(new events)/request
+    state_capacity: int = 256     # users resident in the state store
     breaker_threshold: int = 5
     breaker_cooldown_s: float = 1.0
 
@@ -332,6 +334,13 @@ class ScenarioSpec:
                 FaultPlan.parse(self.knobs.faults)
             except ValueError as e:
                 bad(f"knobs.faults: {e}")
+        if self.serve.incremental and self.serve.cache_user_tower:
+            bad("serve.incremental and serve.cache_user_tower are mutually "
+                "exclusive: the state store already subsumes the user-tower "
+                "memoization for stateful archs — pick one")
+        if self.serve.state_capacity <= 0:
+            bad(f"serve.state_capacity must be positive, got "
+                f"{self.serve.state_capacity}")
         if self.obs.mode is not None:
             from repro.obs.metrics import OBS_MODES
             if self.obs.mode not in OBS_MODES:

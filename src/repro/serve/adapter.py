@@ -1,0 +1,75 @@
+"""ServeAdapter — the first-class contract between a model architecture and
+the scoring engine.
+
+Every servable arch exposes its model halves through one frozen interface
+(scenario/build.py constructs one per arch factory):
+
+  * ``score(params, batch)`` — the fused forward; the only required entry
+    point. Stateless archs stop here.
+  * ``user_repr(params, batch)`` / ``score_from_user(params, batch, user)``
+    — the RO/NRO split (paper §2.2): the request-only half computed once per
+    unique payload and memoized by the user-tower cache
+    (serve/user_cache.py).
+  * ``init_user_state()`` / ``extend_user_state(params, batch, state,
+    n_new=...)`` / ``score_from_state(params, batch, state, n_new=...)`` —
+    the stateful hooks for incremental serving: per-user K/V + history state
+    persisted across requests (serve/user_cache.py ``UserStateStore``) so a
+    repeat user costs O(new events), not O(S). ``state_hist_len`` declares
+    the history capacity the state covers; the engine requires it to match
+    the batcher window so "prefix of the effective history" is well defined.
+
+The engine consumes capabilities, not arch names: ``supports_user_cache``
+gates the memoized split path, ``supports_incremental`` gates the
+state-store path, and everything else falls back to the fused ``score``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeAdapter:
+    """Serving entry points of one architecture (see module docstring).
+
+    Callable signatures:
+      * score(params, batch) -> (B_NRO,) | (B_NRO, n_tasks)
+      * user_repr(params, batch) -> (B_RO, ...)
+      * score_from_user(params, batch, user) -> like ``score``
+      * init_user_state() -> per-user state pytree (no batch axis)
+      * extend_user_state(params, batch, state, *, n_new) -> state
+      * score_from_state(params, batch, state, *, n_new) -> (scores, state)
+        where ``state`` carries a leading batch axis and ``n_new`` is the
+        static new-event row budget.
+    """
+    score: Callable
+    user_repr: Optional[Callable] = None
+    score_from_user: Optional[Callable] = None
+    init_user_state: Optional[Callable] = None
+    extend_user_state: Optional[Callable] = None
+    score_from_state: Optional[Callable] = None
+    state_hist_len: int = 0
+
+    @property
+    def supports_user_cache(self) -> bool:
+        """True when the RO/NRO split halves are available (user-tower
+        memoization)."""
+        return (self.user_repr is not None
+                and self.score_from_user is not None)
+
+    @property
+    def supports_incremental(self) -> bool:
+        """True when the stateful hooks are available (incremental
+        user-state serving)."""
+        return (self.init_user_state is not None
+                and self.score_from_state is not None
+                and self.state_hist_len > 0)
+
+    # -- legacy aliases (PRs 2-8 spelled the halves score_fn / user_fn) -----
+    @property
+    def score_fn(self) -> Callable:
+        return self.score
+
+    @property
+    def user_fn(self) -> Optional[Callable]:
+        return self.user_repr

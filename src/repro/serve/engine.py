@@ -41,8 +41,10 @@ from repro.obs import export as obs_export
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.reliability import faults
+from repro.serve.adapter import ServeAdapter
 from repro.serve.bucketing import BucketLadder, BucketStats
-from repro.serve.user_cache import UserTowerCache, request_key
+from repro.serve.user_cache import (UserStateStore, UserTowerCache,
+                                    request_key)
 
 
 class ScoreError:
@@ -90,6 +92,7 @@ class EngineStats:
     n_deadline_flushes: int = 0
     n_forced_flushes: int = 0
     n_full_cache_batches: int = 0      # batches whose user tower was skipped
+    n_incremental_batches: int = 0     # batches scored via the state store
     n_failed_batches: int = 0          # forwards that raised (isolated)
     n_failed_requests: int = 0         # requests resolved to ScoreError
     n_shed_requests: int = 0           # requests shed by the open breaker
@@ -138,33 +141,63 @@ def split_oversize(sample: ROOSample, cap: int) -> List[ROOSample]:
 class ScoringEngine:
     """Request-aligned, cache-aware scoring around jit'd model halves.
 
-    ``score_fn(params, batch) -> (B_NRO,) | (B_NRO, n_tasks)`` is the fused
-    forward. Passing the split entry points ``user_fn(params, batch) ->
-    (B_RO, ...)`` and ``score_from_user(params, batch, user)`` additionally
-    enables the user-tower cache.
+    The model halves come from a :class:`~repro.serve.adapter.ServeAdapter`
+    (``adapter=``) or from bare callables: ``score_fn(params, batch) ->
+    (B_NRO,) | (B_NRO, n_tasks)`` is the fused forward; the split entry
+    points ``user_fn(params, batch) -> (B_RO, ...)`` and
+    ``score_from_user(params, batch, user)`` additionally enable the
+    user-tower cache; an adapter with stateful hooks plus a
+    ``state_store`` routes every batch through the incremental path
+    (repeat users cost O(new events); misses recompute from empty through
+    the same prefix code path).
 
     Two front ends share one scoring core:
       * online:  ``submit`` / ``poll`` / ``flush`` / ``take``  (micro-batcher)
       * bulk:    ``score_stream`` (generator) / ``score_requests`` (list)
     """
 
-    def __init__(self, params, score_fn: Callable, *,
+    def __init__(self, params, score_fn: Optional[Callable] = None, *,
                  policy: Optional[EnginePolicy] = None,
                  ladder: Optional[BucketLadder] = None,
+                 adapter: Optional[ServeAdapter] = None,
                  user_fn: Optional[Callable] = None,
                  score_from_user: Optional[Callable] = None,
                  cache: Optional[UserTowerCache] = None,
+                 state_store: Optional[UserStateStore] = None,
                  attn_backend: Optional[str] = None,
                  clock: Callable[[], float] = time.monotonic):
+        if adapter is not None:
+            score_fn = score_fn or adapter.score
+            user_fn = user_fn or adapter.user_repr
+            score_from_user = score_from_user or adapter.score_from_user
+        if score_fn is None:
+            raise ValueError("ScoringEngine needs score_fn or an adapter")
         if cache is not None and (user_fn is None or score_from_user is None):
             raise ValueError("user-tower cache requires the split entry "
                              "points user_fn and score_from_user")
+        if state_store is not None:
+            if adapter is None or not adapter.supports_incremental:
+                raise ValueError(
+                    "state_store requires an adapter with the stateful "
+                    "hooks (init_user_state / score_from_state)")
+            if cache is not None:
+                raise ValueError("state_store and the user-tower cache are "
+                                 "mutually exclusive")
         self._params = params
         self.policy = policy or EnginePolicy()
+        if (state_store is not None
+                and adapter.state_hist_len != self.policy.hist_len):
+            raise ValueError(
+                f"incremental serving needs the adapter state capacity "
+                f"({adapter.state_hist_len}) to equal the batcher window "
+                f"(policy.hist_len={self.policy.hist_len}) so 'prefix of "
+                f"the effective history' is well defined")
         self.ladder = ladder or BucketLadder.geometric(
             max_b_ro=self.policy.max_requests,
             max_b_nro=self.policy.max_impressions)
+        self.adapter = adapter
         self.cache = cache
+        self.state_store = state_store
         self.attn_backend = attn_backend
         self.clock = clock
         self.stats = EngineStats()
@@ -172,6 +205,10 @@ class ScoringEngine:
         self._user = jax.jit(user_fn) if user_fn is not None else None
         self._from_user = (jax.jit(score_from_user)
                            if score_from_user is not None else None)
+        # param epoch versions every store entry; bumped on weight swap
+        self._param_epoch = 0
+        # jitted score_from_state per static n_new rung (bounded: powers of 2)
+        self._from_state_jit: Dict[int, Callable] = {}
         # online micro-batcher state
         self._pending: List[Tuple[int, ROOSample]] = []
         self._pending_imps = 0
@@ -206,22 +243,34 @@ class ScoringEngine:
 
     @params.setter
     def params(self, new_params) -> None:
-        # cached user-tower rows were computed with the old params —
-        # a weight refresh must not serve mixed-version scores
+        # cached rows / user states were computed with the old params — a
+        # weight refresh bumps the epoch and drops every stale-epoch entry,
+        # so mixed-version scores are impossible
         self._params = new_params
+        self._param_epoch += 1
         if self.cache is not None:
-            self.cache.clear()
+            self.cache.invalidate_epoch(self._param_epoch)
+        if self.state_store is not None:
+            self.state_store.invalidate_epoch(self._param_epoch)
+
+    @property
+    def param_epoch(self) -> int:
+        """Monotone version of the served parameters (0 at construction,
+        +1 per assignment to ``params``); stores key entries by it."""
+        return self._param_epoch
 
     def snapshot(self) -> dict:
         """Whole-engine view for ``obs.snapshot()``: scoring counters,
         cache effectiveness, breaker state — one consistent read."""
         out = {"stats": self.stats.snapshot(),
                "pending_requests": len(self._pending),
+               "param_epoch": self._param_epoch,
                "breaker": {"consecutive_failures": self._breaker_failures,
                            "open": self._breaker_open_until is not None}}
         if self.cache is not None:
-            out["cache"] = {"size": len(self.cache),
-                            **self.cache.stats.snapshot()}
+            out["cache"] = self.cache.snapshot()
+        if self.state_store is not None:
+            out["state_store"] = self.state_store.snapshot()
         return out
 
     # ---- online front end ----------------------------------------------------
@@ -451,13 +500,16 @@ class ScoringEngine:
 
     def _score_batch_device(self, batch, samples: List[ROOSample],
                             plan: BatchPlan):
+        if self.state_store is not None:
+            return self._score_batch_incremental(batch, samples, plan)
         if self.cache is None:
             return self._score(self.params, batch)
         # cache path: try to serve the whole RO side from cache; on any
         # miss compute the user tower once for the batch and backfill.
+        epoch = self._param_epoch
         keys = {p.row: request_key(samples[p.request_index])
                 for p in plan.requests}
-        cached = {row: self.cache.get(k) for row, k in keys.items()}
+        cached = {row: self.cache.get(k, epoch) for row, k in keys.items()}
         if cached and all(v is not None for v in cached.values()):
             any_row = next(iter(cached.values()))
             u_host = np.zeros((batch.b_ro,) + any_row.shape, any_row.dtype)
@@ -469,5 +521,49 @@ class ScoringEngine:
             user = self._user(self.params, batch)
             u_host = np.asarray(user)
             for row, k in keys.items():
-                self.cache.put(k, u_host[row])
+                self.cache.put(k, u_host[row], epoch)
         return self._from_user(self.params, batch, user)
+
+    def _score_batch_incremental(self, batch, samples: List[ROOSample],
+                                 plan: BatchPlan):
+        """Incremental path: probe the state store per row, extend each
+        user's K/V state with only their uncached events, score, and write
+        the refreshed per-row states back.
+
+        Misses (unknown user / eviction / epoch change / prefix mismatch)
+        probe as prefix 0 with a zero state, which makes them full
+        recomputes *through the same prefix kernel* — one parity-tested
+        code path for hit and fallback. The per-batch new-event budget
+        ``n_new`` is the max uncached count rounded up to a power of two,
+        so jit sees at most log2(hist_cap) shapes per bucket.
+        """
+        ad = self.adapter
+        epoch = self._param_epoch
+        cap = ad.state_hist_len
+        probes = {p.row: self.state_store.probe(
+            samples[p.request_index], epoch, cap) for p in plan.requests}
+        n_new_max = max([pr.eff_len - pr.prefix_len
+                         for pr in probes.values()], default=1)
+        n_new = 1
+        while n_new < n_new_max:
+            n_new *= 2
+        n_new = min(n_new, cap)
+        template = jax.tree.map(np.asarray, ad.init_user_state())
+        rows = [probes[r].state
+                if (r in probes and probes[r].state is not None) else template
+                for r in range(batch.b_ro)]
+        state = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *rows)
+        fn = self._from_state_jit.get(n_new)
+        if fn is None:
+            fn = jax.jit(lambda p, b, s, _n=n_new:
+                         ad.score_from_state(p, b, s, n_new=_n))
+            self._from_state_jit[n_new] = fn
+        scores, new_state = fn(self.params, batch, state)
+        new_host = jax.tree.map(np.asarray, new_state)
+        for p in plan.requests:
+            pr = probes[p.row]
+            row_state = jax.tree.map(lambda a: np.array(a[p.row]), new_host)
+            self.state_store.put(samples[p.request_index].user_id, epoch,
+                                 pr.eff_len, pr.digest, row_state)
+        self.stats.inc("n_incremental_batches")
+        return scores

@@ -1,27 +1,35 @@
-"""User-tower memoization — ROO dedup applied to inference (paper §2.2).
+"""Serving-side per-user stores — ROO dedup applied to inference (§2.2).
 
-The paper's serving insight is that the request is the unit of work: all of
-a request's candidates share one RO (user-side) computation. The engine
-already amortizes that *within* a batch (the model fans the user repr out on
-device); this cache extends the amortization *across* requests — bulk
-scoring and retrieval re-score the same user against many candidate waves,
-and repeat requests in online traffic re-present identical RO payloads.
+Two stores with one theme: everything user-side (RO) is recomputed far more
+often than it changes, so memoize it across requests.
 
-Keys fingerprint the full RO payload (user id, dense, id-list, history), so
-a user whose features evolved gets a fresh entry rather than a stale hit —
-history-append is the natural invalidation. Values are per-request rows of
-the user-tower output (host numpy), LRU-evicted.
+* :class:`UserTowerCache` — memoizes the user-tower *output*: RO-payload
+  fingerprint -> user-repr row. A request whose features evolved gets a
+  fresh entry (the payload is the key), so staleness is impossible by
+  construction.
+* :class:`UserStateStore` — persists the incremental serving *state*: per
+  user, the HSTU K/V cache over their history prefix plus how many events it
+  covers. A repeat request extends the state with only its new events
+  (O(new events), not O(S)); the stored prefix digest detects divergence
+  (history rewrite, window slide) and forces a clean full recompute.
+
+Both stores version entries by **param epoch**: the engine bumps the epoch
+on every weight swap and calls :meth:`invalidate_epoch`, so rows computed
+under old parameters can never be served under new ones. Both mirror their
+hit/miss/eviction counters into ``repro.obs`` (``register_stats``), so one
+``obs.snapshot()`` covers cache effectiveness alongside the engine counters.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
 from collections import OrderedDict
-from typing import Optional, Tuple
+from typing import Any, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.joiner import ROOSample
+from repro.obs import metrics as obs_metrics
 
 CacheKey = Tuple[int, bytes]
 
@@ -37,6 +45,17 @@ def request_key(sample: ROOSample) -> CacheKey:
     h.update(b"|")
     h.update(np.asarray(list(sample.history_actions or []), np.int64).tobytes())
     return (sample.user_id, h.digest())
+
+
+def history_digest(ids: Sequence[int], actions: Sequence[int]) -> bytes:
+    """Order-sensitive fingerprint of a history prefix (ids + actions) —
+    what the state store compares to decide 'is the cached prefix still a
+    prefix of this request's history'."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.asarray(list(ids), np.int64).tobytes())
+    h.update(b"|")
+    h.update(np.asarray(list(actions), np.int64).tobytes())
+    return h.digest()
 
 
 @dataclasses.dataclass
@@ -59,42 +78,57 @@ class CacheStats:
 
 
 class UserTowerCache:
-    """LRU cache: RO-payload fingerprint -> user-tower output row (numpy)."""
+    """LRU cache: (RO-payload fingerprint, param epoch) -> user-tower output
+    row (numpy). ``epoch`` defaults to 0 for epoch-unaware callers; the
+    engine passes its current param epoch and calls
+    :meth:`invalidate_epoch` on every weight swap."""
 
     def __init__(self, capacity: int = 4096):
         assert capacity > 0
         self.capacity = capacity
-        self._data: "OrderedDict[CacheKey, np.ndarray]" = OrderedDict()
+        self._data: "OrderedDict[Tuple[CacheKey, int], np.ndarray]" = \
+            OrderedDict()
         self.stats = CacheStats()
+        obs_metrics.register_stats("serve.user_cache", self)
 
     def __len__(self) -> int:
         return len(self._data)
 
     def __contains__(self, key: CacheKey) -> bool:
-        return key in self._data
+        return (key, 0) in self._data
 
-    def get(self, key: CacheKey) -> Optional[np.ndarray]:
-        row = self._data.get(key)
+    def get(self, key: CacheKey, epoch: int = 0) -> Optional[np.ndarray]:
+        row = self._data.get((key, epoch))
         if row is None:
             self.stats.misses += 1
             return None
-        self._data.move_to_end(key)
+        self._data.move_to_end((key, epoch))
         self.stats.hits += 1
         return row
 
-    def put(self, key: CacheKey, row: np.ndarray) -> None:
+    def put(self, key: CacheKey, row: np.ndarray, epoch: int = 0) -> None:
         # copy: callers pass views into the full (b_ro, ...) batch output,
         # and a cached view would pin the whole batch array in memory
-        self._data[key] = np.array(row, copy=True)
-        self._data.move_to_end(key)
+        self._data[(key, epoch)] = np.array(row, copy=True)
+        self._data.move_to_end((key, epoch))
         while len(self._data) > self.capacity:
             self._data.popitem(last=False)
             self.stats.evictions += 1
 
+    def invalidate_epoch(self, current_epoch: int) -> int:
+        """Drop every entry not computed under ``current_epoch`` (a weight
+        refresh must not serve mixed-version scores). Returns the number
+        dropped."""
+        doomed = [k for k in self._data if k[1] != current_epoch]
+        for k in doomed:
+            del self._data[k]
+        self.stats.invalidations += len(doomed)
+        return len(doomed)
+
     def invalidate_user(self, user_id: int) -> int:
         """Drop every entry for a user (e.g. on a feature-store update that
         bypasses the request payload). Returns the number dropped."""
-        doomed = [k for k in self._data if k[0] == user_id]
+        doomed = [k for k in self._data if k[0][0] == user_id]
         for k in doomed:
             del self._data[k]
         self.stats.invalidations += len(doomed)
@@ -102,3 +136,130 @@ class UserTowerCache:
 
     def clear(self) -> None:
         self._data.clear()
+
+    def snapshot(self) -> dict:
+        """obs mirror: size + capacity + hit/miss/eviction counters."""
+        return {"size": len(self._data), "capacity": self.capacity,
+                **self.stats.snapshot()}
+
+
+# ---------------------------------------------------------------------------
+# Incremental user state
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StateStats(CacheStats):
+    prefix_mismatches: int = 0     # stored prefix no longer matches history
+
+    def snapshot(self) -> dict:
+        out = super().snapshot()
+        out["prefix_mismatches"] = self.prefix_mismatches
+        return out
+
+
+@dataclasses.dataclass
+class _StateEntry:
+    epoch: int
+    length: int          # history events the state covers
+    digest: bytes        # history_digest of those events
+    state: Any           # per-user model state pytree (host numpy)
+
+
+class StateProbe(NamedTuple):
+    """Result of :meth:`UserStateStore.probe` for one request."""
+    prefix_len: int            # usable cached events (0 on miss)
+    state: Optional[Any]       # the cached state pytree, or None
+    eff_len: int               # window-clipped history length of the request
+    digest: bytes              # digest of the full effective history (for put)
+
+
+class UserStateStore:
+    """LRU store: user_id -> incremental serving state, versioned by param
+    epoch and guarded by a history-prefix digest.
+
+    The batcher keeps the most recent ``hist_cap`` events of a history
+    (sliding window), so the *effective* history of a request is its last
+    ``hist_cap`` events. A stored state is usable iff it was computed under
+    the current param epoch AND the events it covers are still a prefix of
+    the effective history (digest match). Anything else — unknown user,
+    evicted entry, stale epoch, rewritten history, slid window — probes as a
+    miss, and the engine recomputes from empty through the same prefix path
+    (one parity-tested fallback, no second code path).
+    """
+
+    def __init__(self, capacity: int = 256):
+        assert capacity > 0
+        self.capacity = capacity
+        self._data: "OrderedDict[int, _StateEntry]" = OrderedDict()
+        self.stats = StateStats()
+        obs_metrics.register_stats("serve.user_state", self)
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, user_id: int) -> bool:
+        return user_id in self._data
+
+    def probe(self, sample: ROOSample, epoch: int,
+              hist_cap: int) -> StateProbe:
+        """Look up the usable cached prefix for a request (see class doc)."""
+        ids = list(sample.history_ids or [])[-hist_cap:]
+        acts = list(sample.history_actions or [])[-hist_cap:]
+        full_digest = history_digest(ids, acts)
+        entry = self._data.get(sample.user_id)
+        if entry is None:
+            self.stats.misses += 1
+            return StateProbe(0, None, len(ids), full_digest)
+        if entry.epoch != epoch:
+            del self._data[sample.user_id]
+            self.stats.invalidations += 1
+            self.stats.misses += 1
+            return StateProbe(0, None, len(ids), full_digest)
+        if (entry.length > len(ids)
+                or history_digest(ids[:entry.length],
+                                  acts[:entry.length]) != entry.digest):
+            # history diverged from the cached prefix (rewrite or window
+            # slide) — the state is unusable, drop it
+            del self._data[sample.user_id]
+            self.stats.prefix_mismatches += 1
+            self.stats.misses += 1
+            return StateProbe(0, None, len(ids), full_digest)
+        self._data.move_to_end(sample.user_id)
+        self.stats.hits += 1
+        return StateProbe(entry.length, entry.state, len(ids), full_digest)
+
+    def put(self, user_id: int, epoch: int, length: int, digest: bytes,
+            state: Any) -> None:
+        """Store a user's refreshed state (caller passes host-side arrays;
+        the store holds them as given — the engine copies row slices)."""
+        self._data[user_id] = _StateEntry(epoch, length, digest, state)
+        self._data.move_to_end(user_id)
+        while len(self._data) > self.capacity:
+            self._data.popitem(last=False)
+            self.stats.evictions += 1
+
+    def invalidate_epoch(self, current_epoch: int) -> int:
+        """Drop every state not computed under ``current_epoch``."""
+        doomed = [u for u, e in self._data.items()
+                  if e.epoch != current_epoch]
+        for u in doomed:
+            del self._data[u]
+        self.stats.invalidations += len(doomed)
+        return len(doomed)
+
+    def invalidate_user(self, user_id: int) -> int:
+        if user_id in self._data:
+            del self._data[user_id]
+            self.stats.invalidations += 1
+            return 1
+        return 0
+
+    def clear(self) -> None:
+        self._data.clear()
+
+    def snapshot(self) -> dict:
+        """obs mirror: size + capacity + hit/miss/eviction/mismatch
+        counters."""
+        return {"size": len(self._data), "capacity": self.capacity,
+                **self.stats.snapshot()}
