@@ -1,0 +1,167 @@
+"""Compressed/overlapped embedding-exchange benchmark (docs/DISTRIBUTED.md).
+
+Times the real sharded LSR train step (grad-accum microbatches=2) under the
+``comms`` knob group of ``repro.distributed.comms``:
+
+  comms_exchange_step_sync     — compress=none, overlap=off (the PR 4 path)
+  comms_exchange_step_overlap  — compress=none, overlap=on: the grad-accum
+                                 scan unrolled so XLA's latency-hiding
+                                 scheduler can overlap microbatch k+1's
+                                 lookup psums with k's dense compute; gated
+                                 no-regression vs sync via the shared
+                                 baseline
+  comms_exchange_step_int8     — int8 + overlap: per-block quantized wire
+                                 with error-feedback residual; derived
+                                 carries the exchange layer's on-wire
+                                 accounting (``wire_x`` must stay >= 2, the
+                                 ISSUE 10 acceptance bound)
+  comms_quantize_int8          — microbenchmark of the per-block quantizer
+                                 round-trip alone; informational, NOT in the
+                                 committed baseline (it does not scale with
+                                 the mesh, so an 8-device run would skew the
+                                 leave-one-out sibling medians of the step
+                                 rows)
+
+The mesh adapts to visible devices (1 -> 1x1 .. 8 -> 2x4) so the 1-device
+smoke gate and the 8-device ``tier1-multidevice`` job both emit every row.
+The committed baseline values are the median of 3 runs at the 2x4 mesh —
+the configuration the ISSUE gates — so the meaningful regression gate is
+the 8-device job's ``compare.py --families comms``; in the 1-device
+check.sh smoke the rows run ~10x under baseline and the gate is trivially
+green (compare.py only fails rows that are slower in absolute terms).
+Run standalone (the 8-device CI job) with::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m benchmarks.comms_bench --json comms_smoke.json
+"""
+from __future__ import annotations
+
+from repro.launch.hostdevices import apply_host_device_env
+
+apply_host_device_env()   # before anything can initialize the jax backend
+
+import jax                                                     # noqa: E402
+import jax.numpy as jnp                                        # noqa: E402
+import numpy as np                                             # noqa: E402
+
+from benchmarks.common import emit, time_fn                    # noqa: E402
+
+
+def _mesh_shape() -> tuple:
+    n = jax.device_count()
+    if n >= 8:
+        return (2, 4)
+    if n >= 4:
+        return (2, 2)
+    if n >= 2:
+        return (1, 2)
+    return (1, 1)
+
+
+def _setup(smoke: bool):
+    from repro.core.joiner import RequestLevelJoiner
+    from repro.data.batcher import BatcherConfig, ROOBatcher
+    from repro.data.events import EventSimulator, EventStreamConfig
+    from repro.distributed import spmd
+    from repro.distributed.sharding import plan_for_mesh
+    from repro.launch.mesh import make_test_mesh
+    from repro.core.hstu import HSTUConfig
+    from repro.models.lsr import LSRConfig, lsr_init, lsr_loss
+    from repro.train.optim import (adam, default_is_embedding, make_mixed,
+                                   rowwise_adagrad)
+
+    n_data, n_model = _mesh_shape()
+    mesh = make_test_mesh(n_data, n_model)
+    plan = plan_for_mesh(mesh)
+    # vocabs divide model and clear spmd.SHARD_MIN_ROWS -> tables genuinely
+    # row-shard and the lookup/grad collectives are real (same config family
+    # as tests/test_distributed_train.py)
+    cfg = LSRConfig(n_items=2048 if not smoke else 512, n_user_cats=64,
+                    n_item_cats=64, embed_dim=32, n_ro_dense=16,
+                    n_item_dense=8, hist_len=16, mode="userarch_hstu",
+                    lce_n_out=4, lce_d_out=32, n_cross_layers=2,
+                    top_mlp=(64,),
+                    hstu=HSTUConfig(d_model=32, n_heads=2, d_qk=16, d_v=16,
+                                    n_layers=1, max_rel_pos=16))
+    stream = EventStreamConfig(n_requests=60, n_items=cfg.n_items,
+                               hist_init_max=12, seed=0)
+    samples = RequestLevelJoiner().join(list(EventSimulator(stream).stream()))
+    bcfg = BatcherConfig(b_ro=8, b_nro=32, hist_len=16, n_shards=n_data,
+                         ro_idlist_capacity=256, item_idlist_capacity=512)
+    batches = list(ROOBatcher(bcfg).batches(samples))
+    # two microbatches stacked on a leading accumulation axis
+    mb = jax.tree.map(lambda a, b: jnp.stack([a, b]), batches[0], batches[1])
+    params = lsr_init(jax.random.PRNGKey(0), cfg)
+    opt = make_mixed(adam(1e-3), rowwise_adagrad(0.01), default_is_embedding)
+    loss_fn = lambda p, b, r: lsr_loss(p, cfg, b, plan=plan)  # noqa: E731
+    return plan, spmd, cfg, mb, params, opt, loss_fn, f"{n_data}x{n_model}"
+
+
+def _time_step(plan, spmd, mb, params, opt, loss_fn, compress, overlap):
+    from repro.distributed import comms
+    from repro.scenario.knobs import UNSET
+    from repro.train.loop import make_train_step
+    comms.COMPRESS_KNOB.set_default(compress)
+    comms.OVERLAP_KNOB.set_default(overlap)
+    try:
+        state = {"params": params, "opt": opt.init(params),
+                 "step": jnp.zeros((), jnp.int32)}
+        if compress != "none":
+            state["comms_ef"] = comms.ef_init(params, plan)
+        sh = spmd.state_shardings(state, plan)
+        state = jax.device_put(state, sh)
+        step = make_train_step(loss_fn, opt, microbatches=2, plan=plan,
+                               state_shardings=sh)
+        batch = spmd.place_batch(mb, plan, batch_dim=1)
+        rng = jax.random.PRNGKey(7)
+        return time_fn(step, state, batch, rng)
+    finally:
+        comms.COMPRESS_KNOB.set_default(UNSET)
+        comms.OVERLAP_KNOB.set_default(UNSET)
+
+
+def run(smoke: bool = False) -> None:
+    from repro.distributed import comms
+    plan, spmd, cfg, mb, params, opt, loss_fn, mesh_s = _setup(smoke)
+    shape = f"mesh={mesh_s};V{cfg.n_items}xD{cfg.embed_dim};mb=2"
+
+    t_sync = _time_step(plan, spmd, mb, params, opt, loss_fn, "none", "off")
+    emit("comms_exchange_step_sync", t_sync, shape)
+
+    t_ovl = _time_step(plan, spmd, mb, params, opt, loss_fn, "none", "on")
+    snap = comms.STATS.snapshot()
+    emit("comms_exchange_step_overlap", t_ovl,
+         f"{shape};occupancy={snap['overlap']['occupancy']:.2f};"
+         f"vs_sync_x={t_sync / t_ovl:.2f}")
+
+    comms.STATS.reset()
+    t_int8 = _time_step(plan, spmd, mb, params, opt, loss_fn, "int8", "on")
+    snap = comms.STATS.snapshot()
+    emit("comms_exchange_step_int8", t_int8,
+         f"{shape};wire_x={snap['compression_ratio']:.2f};"
+         f"f32B={snap['f32_bytes_per_step']};"
+         f"wireB={snap['wire_bytes_per_step']};"
+         f"dedup_sites={snap['dedup_exchanges']}")
+
+    # quantizer round-trip alone (informational; not in the baseline)
+    x = jnp.asarray(np.random.RandomState(0).normal(
+        size=(4096, 128)).astype(np.float32))
+    fq = jax.jit(lambda t: comms.fake_quant(t, "int8", 128))
+    emit("comms_quantize_int8", time_fn(fq, x),
+         f"4096x128;block=128;"
+         f"wire_x={(x.size * 4) / comms.wire_bytes(x.shape, 'int8', 128):.2f}")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks.common import write_json
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    try:
+        run(smoke=args.smoke)
+    finally:
+        write_json(args.json)

@@ -138,8 +138,18 @@ def main() -> int:
                          "the suite median (default 1.0 = 100%%)")
     ap.add_argument("--absolute", action="store_true",
                     help="skip machine normalization (same-machine compare)")
+    ap.add_argument("--families", default=None, metavar="F1,F2",
+                    help="gate only these benchmark families (row-name "
+                         "prefixes, comma-separated) — e.g. a partial CI "
+                         "job that only ran the comms benchmarks compares "
+                         "with --families comms so every other baseline "
+                         "row is not reported missing")
     args = ap.parse_args()
     base, cur = load_rows(args.baseline), load_rows(args.current)
+    if args.families:
+        fams = {f.strip() for f in args.families.split(",") if f.strip()}
+        base = {n: v for n, v in base.items() if family(n) in fams}
+        cur = {n: v for n, v in cur.items() if family(n) in fams}
     lines, failures = compare(base, cur, args.max_regress, args.absolute,
                               args.max_group_regress)
     print(f"== bench compare: {len(base)} baseline rows, {len(cur)} current, "

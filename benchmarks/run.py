@@ -25,6 +25,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                              telemetry emit (docs/OBSERVABILITY.md);
                              obs_record_off (the disabled path every run
                              pays) is gated, the rest informational
+  comms_*                  — compressed/overlapped embedding exchange:
+                             sharded train-step time sync vs overlap vs
+                             int8, plus on-wire byte accounting
+                             (docs/DISTRIBUTED.md); step rows gated,
+                             comms_quantize_int8 informational
 
 ``--smoke`` runs the kernel, embedding, serving, and pipeline benchmarks at
 reduced scale — the tier-1 perf gate wired into scripts/check.sh. ``--json
@@ -44,14 +49,16 @@ def main() -> None:
     from benchmarks.common import write_json
     print("name,us_per_call,derived")
     try:
-        from benchmarks import (embedding_bench, hstu_kernel, obs_bench,
-                                pipeline_bench, reliability_bench, serving)
+        from benchmarks import (comms_bench, embedding_bench, hstu_kernel,
+                                obs_bench, pipeline_bench, reliability_bench,
+                                serving)
         hstu_kernel.run(smoke=smoke)
         embedding_bench.run(smoke=smoke)
         serving.run(smoke=smoke)
         pipeline_bench.run(smoke=smoke)
         reliability_bench.run(smoke=smoke)
         obs_bench.run(smoke=smoke)
+        comms_bench.run(smoke=smoke)
         if smoke:
             return
         from benchmarks import (join_quality, retrieval_flops, roofline,

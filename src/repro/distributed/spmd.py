@@ -84,6 +84,15 @@ def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
     if not plan.enabled or len(shape) == 0:
         return P()
     mesh = plan.mesh
+    # the comms error-feedback residual (state["comms_ef"], one (V, D)
+    # buffer per compressed table — distributed/comms.py) shards exactly
+    # like the table it compensates, independent of the caller's embedding
+    # predicate: a residual that de-shards from its table would buy a
+    # reshard on every gradient exchange
+    if path and "comms_ef" in path[0]:
+        if table_is_sharded(plan, shape[0]):
+            return P(plan.model_axis, *([None] * (len(shape) - 1)))
+        return P()
     if is_embedding(path):
         if table_is_sharded(plan, shape[0]):
             return P(plan.model_axis, *([None] * (len(shape) - 1)))

@@ -176,6 +176,11 @@ def _plan_shards(table: Table, vocab: int, plan) -> bool:
     return table_is_sharded(plan, vocab)
 
 
+def _compress_active() -> bool:
+    from repro.distributed import comms
+    return comms.compress_mode() != "none"
+
+
 # ---------------------------------------------------------------------------
 # Lookup modes.
 # ---------------------------------------------------------------------------
@@ -194,10 +199,14 @@ def seq_lookup(table: Table, ids: jnp.ndarray, *, vocab: Optional[int] = None,
             # axis sharding contract holds), expand locally
             out = sharded_seq_lookup(
                 table, uids.reshape(clipped.shape), mesh=plan.mesh, vocab=v,
-                model_axis=plan.model_axis, batch_axes=plan.batch_axes)
+                model_axis=plan.model_axis, batch_axes=plan.batch_axes,
+                stats_dedup=True)
             return out.reshape(-1, out.shape[-1])
 
-        if _want_dedup(v, clipped.size, dedup):
+        # a compressed wire forces the dedup route: only the request's
+        # unique rows ride the quantized psum, duplicates expand locally
+        # from the reconstructed buffer (bit-identical expansion)
+        if _want_dedup(v, clipped.size, dedup) or _compress_active():
             return dedup_gather(table, clipped, psum_rows)
         return sharded_seq_lookup(table, clipped, mesh=plan.mesh, vocab=v,
                                   model_axis=plan.model_axis,
@@ -231,7 +240,8 @@ def bag_lookup(table: Table, ids: JaggedTensor, pooling: str = "sum", *,
 def bag_lookup_dense(table: Table, ids: jnp.ndarray, lengths: jnp.ndarray,
                      pooling: str = "sum", *, vocab: Optional[int] = None,
                      plan=None, dedup: Optional[bool] = None,
-                     backend: Optional[str] = None) -> jnp.ndarray:
+                     backend: Optional[str] = None,
+                     out_sharded: Optional[bool] = None) -> jnp.ndarray:
     """Padded-layout bag: (B, L) ids + (B,) lengths -> (B, D).
 
     On TPU (or under an explicit ``backend``) unsharded dense tables route
@@ -240,14 +250,30 @@ def bag_lookup_dense(table: Table, ids: jnp.ndarray, lengths: jnp.ndarray,
     kernel cannot honor. The jnp path dedup-gathers then pools. ``max``
     pooling never routes to the psum bag (it cannot reassemble a max); on a
     plan-sharded table it falls back to the partitionable jnp gather.
+
+    ``out_sharded=True`` declares that the consumer tolerates the output
+    dim-sharded ``P(batch, model)`` — e.g. DLRM's dot interaction, which
+    contracts over D — and routes a sharded table through the
+    reduce-scatter lookup (``sharded_bag_lookup_rs``, half the collective
+    bytes of the psum). Numerically the same bag; only the layout differs.
     """
     v = _vocab_of(table, vocab)
     sharded = _plan_shards(table, v, plan)
     if pooling in ("sum", "mean") and sharded:
-        from repro.embeddings.sharded import sharded_bag_lookup
+        from repro.embeddings.sharded import (sharded_bag_lookup,
+                                              sharded_bag_lookup_rs)
         # clip first: the sharded partial-bag zeroes out-of-range ids while
         # the local path clips them — parity requires clip-then-shard
-        return sharded_bag_lookup(table, jnp.clip(ids, 0, v - 1), lengths,
+        clipped = jnp.clip(ids, 0, v - 1)
+        n_model = plan.mesh.shape[plan.model_axis]
+        d = int(table.shape[-1])
+        if out_sharded and n_model > 1 and d % n_model == 0:
+            return sharded_bag_lookup_rs(table, clipped, lengths,
+                                         mesh=plan.mesh, vocab=v,
+                                         pooling=pooling,
+                                         model_axis=plan.model_axis,
+                                         batch_axes=plan.batch_axes)
+        return sharded_bag_lookup(table, clipped, lengths,
                                   mesh=plan.mesh, vocab=v, pooling=pooling,
                                   model_axis=plan.model_axis,
                                   batch_axes=plan.batch_axes)

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.data.jagged import JaggedTensor
+from repro.distributed import comms
 from repro.distributed.sharding import shard_map
 from repro.embeddings.bag import bag_lookup, bag_lookup_dense
 # table configs live with the collection (the embedding entry point);
@@ -80,13 +81,19 @@ def sharded_bag_lookup(table: jnp.ndarray, ids: jnp.ndarray,
     table: (V, D) sharded P(model, None); ids/lengths: (B, L)/(B,) sharded
     P(batch_axes). Output: (B, D) sharded P(batch_axes, None).
     Collective cost: one (B_local, D) psum over `model` per call — lookups for
-    RO features therefore move B_RO·D bytes instead of B_NRO·D.
+    RO features therefore move B_RO·D bytes instead of B_NRO·D. The psum
+    payload rides the wire compressed per the ``comms_compress`` knob.
     """
     n_shards = mesh.shape[model_axis]
+    mode, block = comms.compress_mode(), comms.block_size()
+    comms.STATS.record_exchange(
+        f"lookup:bag:V{vocab}xB{ids.shape[0]}xD{table.shape[-1]}",
+        (ids.shape[0], table.shape[-1]), mode=mode, block=block)
 
     def fn(tbl, i, ln):
         shard_idx = jax.lax.axis_index(model_axis)
         part = _local_partial_bag(tbl, i, ln, vocab, n_shards, shard_idx, pooling)
+        part = comms.wire_transform(part, mode, block)
         return jax.lax.psum(part, model_axis)
 
     return shard_map(
@@ -97,7 +104,8 @@ def sharded_bag_lookup(table: jnp.ndarray, ids: jnp.ndarray,
 
 def sharded_seq_lookup(table: jnp.ndarray, ids: jnp.ndarray, *, mesh: Mesh,
                        vocab: int, model_axis: str = "model",
-                       batch_axes: Tuple[str, ...] = ("data",)) -> jnp.ndarray:
+                       batch_axes: Tuple[str, ...] = ("data",),
+                       stats_dedup: bool = False) -> jnp.ndarray:
     """Row-sharded per-position lookup: (B, L) ids -> (B, L, D) rows.
 
     The sequence-encoder analogue of ``sharded_bag_lookup`` (no pooling:
@@ -105,8 +113,16 @@ def sharded_seq_lookup(table: jnp.ndarray, ids: jnp.ndarray, *, mesh: Mesh,
     zeros the rest; the psum over ``model`` reassembles exact ``jnp.take``
     semantics — ids are pre-clipped to [0, vocab), so every position
     contributes exactly one shard's row.
-    Collective cost: one (B_local, L, D) psum over ``model`` per call.
+    Collective cost: one (B_local, L, D) psum over ``model`` per call,
+    compressed on the wire per the ``comms_compress`` knob.
     """
+    mode, block = comms.compress_mode(), comms.block_size()
+    comms.STATS.record_exchange(
+        f"lookup:seq:V{vocab}xB{ids.shape[0]}xL{ids.shape[1]}"
+        f"xD{table.shape[-1]}",
+        ids.shape + (table.shape[-1],), mode=mode, block=block,
+        dedup=stats_dedup)
+
     def fn(tbl, i):
         rows = tbl.shape[0]
         shard_idx = jax.lax.axis_index(model_axis)
@@ -115,6 +131,7 @@ def sharded_seq_lookup(table: jnp.ndarray, ids: jnp.ndarray, *, mesh: Mesh,
         emb = jnp.take(tbl, jnp.clip(local, 0, rows - 1).reshape(-1),
                        axis=0).reshape(i.shape + (tbl.shape[-1],))
         emb = emb * in_shard[..., None].astype(emb.dtype)
+        emb = comms.wire_transform(emb, mode, block)
         return jax.lax.psum(emb, model_axis)
 
     return shard_map(
@@ -138,6 +155,10 @@ def sharded_jagged_bag_lookup(table: jnp.ndarray, ids: JaggedTensor, *,
     if pooling not in ("sum", "mean"):
         raise ValueError(f"sharded jagged bag supports sum/mean, not {pooling}")
     b = ids.batch_size
+    mode, block = comms.compress_mode(), comms.block_size()
+    comms.STATS.record_exchange(
+        f"lookup:jagged:V{vocab}xB{b}xD{table.shape[-1]}",
+        (b, table.shape[-1]), mode=mode, block=block)
 
     def fn(tbl, vals, lens):
         rows = tbl.shape[0]
@@ -149,6 +170,7 @@ def sharded_jagged_bag_lookup(table: jnp.ndarray, ids: JaggedTensor, *,
         emb = jnp.take(tbl, jnp.clip(local, 0, rows - 1), axis=0)
         emb = emb * valid[:, None].astype(emb.dtype)
         out = jax.ops.segment_sum(emb, seg, num_segments=b + 1)[:b]
+        out = comms.wire_transform(out, mode, block)
         out = jax.lax.psum(out, model_axis)
         if pooling == "mean":
             out = out / jnp.maximum(lens, 1).astype(out.dtype)[:, None]
@@ -178,14 +200,22 @@ def sharded_bag_lookup_rs(table: jnp.ndarray, ids: jnp.ndarray,
     """Reduce-scatter variant: output dim-sharded over `model`.
 
     Halves collective bytes vs psum when the consumer (e.g. the interaction
-    arch) can take D/n_shards-sharded embeddings — used by the optimized
-    (beyond-paper) path; see EXPERIMENTS.md §Perf.
+    arch) can take D/n_shards-sharded embeddings. ``collection.py`` routes
+    here when the caller declares ``out_sharded=True`` (DLRM's dot
+    interaction contracts over D, so it never needs the gather back).
+    Composes with wire compression like the psum path.
     """
     n_shards = mesh.shape[model_axis]
+    mode, block = comms.compress_mode(), comms.block_size()
+    comms.STATS.record_exchange(
+        f"lookup:bag_rs:V{vocab}xB{ids.shape[0]}xD{table.shape[-1]}",
+        (ids.shape[0], table.shape[-1]), mode=mode, block=block,
+        collective="psum_scatter")
 
     def fn(tbl, i, ln):
         shard_idx = jax.lax.axis_index(model_axis)
         part = _local_partial_bag(tbl, i, ln, vocab, n_shards, shard_idx, pooling)
+        part = comms.wire_transform(part, mode, block)
         return jax.lax.psum_scatter(part, model_axis, scatter_dimension=1,
                                     tiled=True)
 

@@ -154,6 +154,24 @@ def flatten_stacked(sparse_stacked, scale: float = 1.0):
     return jax.tree_util.tree_map(leaf, sparse_stacked, is_leaf=is_sparse)
 
 
+def concat_sparse(sparse_parts, scale: float = 1.0):
+    """Concatenate per-microbatch SparseRows trees into flat COO — the
+    unrolled-loop analogue of :func:`flatten_stacked` for the overlapped
+    accumulation path (``comms_overlap=on``): a COO sum IS concatenation.
+    Entries land in microbatch order, the exact order scan-stack +
+    flatten produces, so the two accumulation paths stay comparable.
+    This deferred concatenation is what coalesces the SparseRows grad
+    exchange to once per step. Not marked unique (the optimizer's merge
+    folds cross-microbatch duplicates)."""
+    def leaf(*gs):
+        if not is_sparse(gs[0]):
+            return gs[0]
+        return SparseRows(jnp.concatenate([g.ids for g in gs]),
+                          jnp.concatenate([g.rows for g in gs]) * scale,
+                          gs[0].vocab)
+    return jax.tree_util.tree_map(leaf, *sparse_parts, is_leaf=is_sparse)
+
+
 # ---------------------------------------------------------------------------
 # GatheredTable: the lookup-side proxy.
 # ---------------------------------------------------------------------------

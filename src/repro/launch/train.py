@@ -93,6 +93,18 @@ def _parser() -> argparse.ArgumentParser:
                     choices=("auto", "always", "never"),
                     help="request-level id dedup before embedding lookups "
                          "(default auto: tables >= 4096 rows)")
+    ap.add_argument("--comms-compress", default=None,
+                    choices=("none", "bf16", "int8"),
+                    help="wire compression for the sharded-embedding "
+                         "exchange (int8 = per-block scales + error-"
+                         "feedback residual; see docs/DISTRIBUTED.md)")
+    ap.add_argument("--comms-overlap", default=None, choices=("on", "off"),
+                    help="overlap embedding-lookup collectives with dense "
+                         "compute across grad-accum microbatches (unrolls "
+                         "the accumulation scan)")
+    ap.add_argument("--comms-block", type=int, default=None,
+                    help="int8 scale-block width for --comms-compress "
+                         "(default 128)")
     ap.add_argument("--data", default=None, choices=("memory", "disk"),
                     help="recsys data path: in-memory batches (default) or "
                          "the disk-backed shard pipeline with prefetch + "
@@ -145,6 +157,9 @@ def _flag_overrides(args) -> dict:
         "knobs.attn_backend": args.attn_backend,
         "knobs.emb_backend": args.emb_backend,
         "knobs.emb_dedup": args.emb_dedup,
+        "knobs.comms_compress": args.comms_compress,
+        "knobs.comms_overlap": args.comms_overlap,
+        "knobs.comms_block": args.comms_block,
         "data.source": args.data,
         "data.requests_per_shard": args.requests_per_shard,
         "data.label_wait_s": args.label_wait,

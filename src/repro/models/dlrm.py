@@ -90,13 +90,19 @@ def _field_lookup(params: Dict, cfg: DLRMConfig, ids: jnp.ndarray,
 
     Routed through the embedding collection: dedup'd local gathers (or the
     Pallas bag kernel on TPU), and under an SPMD ``plan`` each row-sharded
-    table's bag is an explicit psum over ``model`` — RO fields run at B_RO,
-    so their collectives move B_RO·D instead of B_NRO·D bytes."""
+    table's bag is an explicit collective over ``model`` — RO fields run at
+    B_RO, so their collectives move B_RO·D instead of B_NRO·D bytes.
+    ``out_sharded=True``: the only consumer is ``dot_interaction``, which
+    contracts over D, so the field embeddings tolerate the dim-sharded
+    layout and the collection routes sharded tables through the
+    reduce-scatter lookup (half the bytes of the psum); GSPMD finishes the
+    contraction with a small (B, F²) reduce instead of re-gathering
+    (B, F, D)."""
     embs = []
     for j, i_field in enumerate(fields):
         tbl = params["tables"][f"t{i_field}"]
         embs.append(bag_lookup_dense(tbl, ids[:, j, :], lengths[:, j],
-                                     plan=plan))
+                                     plan=plan, out_sharded=True))
     return jnp.stack(embs, axis=1)
 
 

@@ -126,6 +126,12 @@ class KnobsSpec:
     emb_backend: Optional[str] = None
     emb_dedup: Optional[str] = None     # always | never | auto
     faults: Optional[str] = None        # REPRO_FAULTS grammar
+    # the comms group (distributed/comms.py): wire compression for the
+    # sharded-embedding exchange, overlap of lookup collectives with dense
+    # compute across the grad-accum microbatches, int8 scale-block width
+    comms_compress: Optional[str] = None   # none | bf16 | int8
+    comms_overlap: Optional[str] = None    # on | off
+    comms_block: Optional[int] = None      # int8 scale-block width
 
 
 @dataclasses.dataclass(frozen=True)
@@ -316,8 +322,10 @@ class ScenarioSpec:
         # knob values validate against the same registry the ladder uses;
         # the registering modules are imported lazily (and only when a knob
         # is actually set) so a bare spec round-trip stays stdlib-light
-        knob_names = ("attn_backend", "emb_backend", "emb_dedup")
+        knob_names = ("attn_backend", "emb_backend", "emb_dedup",
+                      "comms_compress", "comms_overlap", "comms_block")
         if any(getattr(self.knobs, k) is not None for k in knob_names):
+            import repro.distributed.comms      # noqa: F401 (registers knobs)
             import repro.embeddings.collection  # noqa: F401 (registers knob)
             import repro.kernels.dispatch       # noqa: F401 (registers knobs)
             from repro.scenario.knobs import REGISTRY
@@ -328,6 +336,9 @@ class ScenarioSpec:
                         REGISTRY[kname].check(val)
                     except ValueError as e:
                         bad(str(e))
+        if self.knobs.comms_block is not None and self.knobs.comms_block <= 0:
+            bad(f"knobs.comms_block must be positive, "
+                f"got {self.knobs.comms_block}")
         if self.knobs.faults is not None:
             from repro.reliability.faults import FaultPlan
             try:
@@ -413,8 +424,10 @@ class ScenarioSpec:
         """Install the spec's knob section as the process defaults on the
         shared ladder (spec beats env, per-call args beat the spec), and
         install the fault plan when one is named. Returns self."""
-        knob_names = ("attn_backend", "emb_backend", "emb_dedup")
+        knob_names = ("attn_backend", "emb_backend", "emb_dedup",
+                      "comms_compress", "comms_overlap", "comms_block")
         if any(getattr(self.knobs, k) is not None for k in knob_names):
+            import repro.distributed.comms      # noqa: F401 (registers knobs)
             import repro.embeddings.collection  # noqa: F401 (registers knob)
             import repro.kernels.dispatch       # noqa: F401 (registers knobs)
             from repro.scenario.knobs import REGISTRY

@@ -26,6 +26,7 @@ from typing import Any, Callable, Dict, Iterator, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import comms as _comms
 from repro.embeddings import sparse as _sp
 from repro.obs import export as obs_export
 from repro.obs import metrics as obs_metrics
@@ -91,16 +92,52 @@ def make_train_step(loss_fn: Callable, opt: Optimizer,
     inputs keep their committed shardings (params/opt FSDP+TP, batch over
     the data axes) and ``out_shardings`` pins the updated state to the same
     layout, so parameters never silently de-shard between steps.
+
+    Comms knobs (distributed/comms.py) resolve HERE, at step-construction
+    time — the step's structure depends on them. ``comms_overlap=on`` with
+    microbatches > 1 unrolls the accumulation scan: ``lax.scan``'s
+    sequential loop is a scheduling barrier between iterations, while the
+    unrolled graph lets XLA's latency-hiding scheduler issue microbatch
+    k+1's embedding-lookup psums while microbatch k's dense compute runs.
+    Accumulation order is identical, so overlap with ``comms_compress=none``
+    is bit-comparable to the scan. With compression on and a
+    ``state["comms_ef"]`` residual present, the coalesced gradient exchange
+    runs through error feedback (``ef_compress_step``) before the optimizer.
     """
     if value_and_grad_fn is None:
         def value_and_grad_fn(params, b, r):
             return jax.value_and_grad(loss_fn)(params, b, r)
     vag = value_and_grad_fn
+    comms_mode = _comms.compress_mode()
+    comms_block = _comms.block_size()
+    overlap = _comms.overlap_enabled() and microbatches > 1
+    _comms.STATS.record_overlap(microbatches, overlap)
 
     def step(state, batch, rng):
         params = state["params"]
 
-        if microbatches > 1:
+        if microbatches > 1 and overlap:
+            # unrolled accumulation (see docstring); the SparseRows grad
+            # exchange stays deferred: COO parts concatenate after the
+            # loop, one coalesced exchange per step
+            acc = None
+            losses = []
+            sp_parts = []
+            for i in range(microbatches):
+                mb = jax.tree.map(lambda x, i=i: x[i], batch)
+                l, g = vag(params, mb, jax.random.fold_in(rng, i))
+                dense_g, sparse_g = _sp.split_sparse(g)
+                dense_g = jax.tree.map(
+                    lambda x: x.astype(jnp.float32), dense_g)
+                acc = (dense_g if acc is None
+                       else jax.tree.map(jnp.add, acc, dense_g))
+                losses.append(l)
+                sp_parts.append(sparse_g)
+            grads = _sp.merge_sparse(
+                jax.tree.map(lambda g: g / microbatches, acc),
+                _sp.concat_sparse(sp_parts, 1.0 / microbatches))
+            loss = jnp.mean(jnp.stack(losses))
+        elif microbatches > 1:
             # which grads leaves are sparse is structural (trace-time):
             # read it off the abstract grads tree so the scan carry holds
             # only the dense part
@@ -128,6 +165,14 @@ def make_train_step(loss_fn: Callable, opt: Optimizer,
         else:
             loss, grads = vag(params, batch, rng)
 
+        # compressed gradient exchange with error feedback: send
+        # q(g + e), carry e' = (g + e) - q(g + e) in optimizer-adjacent
+        # state (checkpointed + sharded like the tables it compensates)
+        new_ef = None
+        if comms_mode != "none" and "comms_ef" in state:
+            grads, new_ef = _comms.ef_compress_step(
+                grads, state["comms_ef"], comms_mode, comms_block)
+
         new_params, new_opt = opt.update(grads, state["opt"], params)
         gnorm = jnp.sqrt(sum(_sp.sq_sum(g) for g in
                              jax.tree.leaves(grads, is_leaf=_sp.is_sparse))
@@ -145,6 +190,11 @@ def make_train_step(loss_fn: Callable, opt: Optimizer,
         # {**state, ...} carries pass-through keys (e.g. the base "rng")
         new_state = {**state, "params": new_params, "opt": new_opt,
                      "step": state["step"] + 1}
+        if new_ef is not None:
+            # the residual reverts with params on a skipped step — a
+            # non-finite gradient must not poison the error accumulator
+            new_state["comms_ef"] = jax.tree.map(keep, new_ef,
+                                                 state["comms_ef"])
         return new_state, {"loss": loss, "grad_norm": gnorm,
                            "skipped": (~ok).astype(jnp.int32)}
 
@@ -200,7 +250,18 @@ class Trainer:
                  "step": jnp.zeros((), jnp.int32)}
         if rng is not None:
             state["rng"] = rng
+        self._ensure_comms_ef(state)
         return state
+
+    def _ensure_comms_ef(self, state: Dict) -> None:
+        """Back-fill the comms error-feedback residual when the compressed
+        exchange is on and the state (fresh or restored from a
+        pre-compression checkpoint) doesn't carry one yet."""
+        if _comms.compress_mode() == "none" or "comms_ef" in state:
+            return
+        ef = _comms.ef_init(state["params"], self.plan)
+        if ef:
+            state["comms_ef"] = ef
 
     def _prepare(self, state: Dict) -> Dict:
         """Place state per plan and build the (possibly SPMD) step fn."""
@@ -234,6 +295,7 @@ class Trainer:
             start = int(state["step"])
             # pre-rng checkpoints: adopt the caller's key (old behavior)
             state.setdefault("rng", rng)
+            self._ensure_comms_ef(state)
         if state is None:
             state = self.init_state(rng)
         state = self._prepare(state)

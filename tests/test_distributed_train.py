@@ -178,6 +178,13 @@ class TestDLRMShardedLookups:
             sh_params, sh_args)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    rtol=2e-5, atol=1e-5)
+        # the field bags declare out_sharded=True (dot_interaction contracts
+        # over D), so sharded tables route through sharded_bag_lookup_rs —
+        # the reduce-scatter must survive into the compiled HLO
+        text = (jax.jit(lambda p, a: dlrm_forward_roo(p, cfg, *a, plan=plan))
+                .lower(sh_params, sh_args).compile().as_text())
+        assert "reduce-scatter" in text, \
+            "expected the RS lookup's reduce-scatter in DLRM HLO"
 
 
 class TestMicrobatchSPMD:
@@ -339,6 +346,130 @@ class TestDedupComposesWithPsum:
         finally:
             set_dedup_policy(None)
         np.testing.assert_allclose(got, want, rtol=2e-5)
+
+
+class TestCompressedOverlappedExchange:
+    """ISSUE 10 acceptance: 50-step loss trajectories under the
+    compressed/overlapped exchange (distributed/comms.py) vs the
+    synchronous full-precision path, through the real sharded train step.
+
+    Bounds here are the documented contract (docs/DISTRIBUTED.md):
+    overlap+none is bit-comparable to the scan; for lossy wire formats
+    the per-step loss perturbation is tiny (property-tested in
+    test_comms.py) but compounds chaotically through 50 optimizer steps
+    — a single-ulp perturbation already grows to ~2e-6 relative by step
+    50 — so trajectory parity is asserted where it is well-posed:
+    pointwise over the early trajectory (before amplification dominates)
+    and on the 50-step trajectory mean.  Overlapped bf16 matches sync
+    f32 within rtol 1e-2 on the trajectory mean (2e-2 pointwise over the
+    first 10 steps); int8+error-feedback within 2e-2 mean / 5e-2 early
+    pointwise.
+    """
+
+    def _stacked(self, dist_batches):
+        # pairs of shards stacked on a leading microbatch axis (M=2)
+        return [jax.tree.map(lambda a, b: jnp.stack([a, b]),
+                             dist_batches[2 * i], dist_batches[2 * i + 1])
+                for i in range(len(dist_batches) // 2)]
+
+    def _train_comms(self, plan_, dist_batches, compress, overlap,
+                     n_steps=N_PARITY_STEPS):
+        from repro.distributed import comms
+        from repro.scenario.knobs import UNSET
+        cfg = _lsr_cfg()
+        params = lsr_init(jax.random.PRNGKey(0), cfg)
+        opt = make_mixed(adam(1e-3), rowwise_adagrad(0.01),
+                         default_is_embedding)
+        mbs = self._stacked(dist_batches)
+        comms.COMPRESS_KNOB.set_default(compress)
+        comms.OVERLAP_KNOB.set_default(overlap)
+        try:
+            state = {"params": params, "opt": opt.init(params),
+                     "step": jnp.zeros((), jnp.int32)}
+            if compress != "none":
+                state["comms_ef"] = comms.ef_init(params, plan_)
+                assert state["comms_ef"], "no compressible tables found"
+            sh = (spmd.state_shardings(state, plan_)
+                  if plan_ is not None else None)
+            if sh is not None:
+                state = jax.device_put(state, sh)
+            step = make_train_step(
+                lambda p, b, r: lsr_loss(p, cfg, b, plan=plan_), opt,
+                microbatches=2, plan=plan_, state_shardings=sh)
+            rng = jax.random.PRNGKey(7)
+            losses = []
+            for i in range(n_steps):
+                batch = spmd.place_batch(mbs[i % len(mbs)], plan_,
+                                         batch_dim=1)
+                state, m = step(state, batch, jax.random.fold_in(rng, i))
+                losses.append(float(m["loss"]))
+            return np.asarray(losses), state
+        finally:
+            comms.COMPRESS_KNOB.set_default(UNSET)
+            comms.OVERLAP_KNOB.set_default(UNSET)
+
+    def test_overlap_none_bit_comparable(self, plan, dist_batches):
+        """Unrolled (overlapped) accumulation vs the scan: identical
+        float-op ORDER, so trajectories agree to the ulp — the only
+        daylight is backend fusion choices inside the unrolled graph
+        (observed <= 2e-6 relative over 50 steps on CPU), orders of
+        magnitude inside the compression bounds."""
+        sync, _ = self._train_comms(plan, dist_batches, "none", "off")
+        ovl, _ = self._train_comms(plan, dist_batches, "none", "on")
+        np.testing.assert_allclose(ovl, sync, rtol=5e-6, atol=5e-7)
+
+    def test_bf16_overlap_matches_sync_f32(self, plan, dist_batches):
+        sync, s_sync = self._train_comms(plan, dist_batches, "none", "off")
+        bf16, s_bf16 = self._train_comms(plan, dist_batches, "bf16", "on")
+        # early trajectory: pointwise, before chaotic amplification
+        np.testing.assert_allclose(bf16[:10], sync[:10],
+                                   rtol=2e-2, atol=2e-3)
+        # full 50-step trajectory: rtol 1e-2 on the mean loss
+        assert abs(bf16.mean() - sync.mean()) <= 1e-2 * sync.mean(), (
+            bf16.mean(), sync.mean())
+        # params stay close in aggregate: global relative drift over the
+        # whole tree (per-element / per-leaf relative comparisons are
+        # ill-posed for near-zero entries and zero-init biases under
+        # chaotic trajectory divergence)
+        diff_sq = tot_sq = 0.0
+        for a, b in zip(jax.tree.leaves(s_sync["params"]),
+                        jax.tree.leaves(s_bf16["params"])):
+            a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+            diff_sq += float(np.sum((a - b) ** 2))
+            tot_sq += float(np.sum(a ** 2))
+        drift = (diff_sq / tot_sq) ** 0.5
+        assert drift <= 0.1, f"global param drift {drift:.3g}"
+
+    def test_int8_ef_within_documented_bound(self, plan, dist_batches):
+        sync, _ = self._train_comms(plan, dist_batches, "none", "off")
+        int8, state = self._train_comms(plan, dist_batches, "int8", "on")
+        np.testing.assert_allclose(int8[:10], sync[:10],
+                                   rtol=5e-2, atol=5e-3)
+        assert abs(int8.mean() - sync.mean()) <= 2e-2 * sync.mean(), (
+            int8.mean(), sync.mean())
+        # the residual is live state: sharded like its table, checkpoint-
+        # adjacent, and non-zero once quantization error accumulates
+        ef = state["comms_ef"]["item_emb"]
+        assert tuple(ef.sharding.spec) == ("model", None)
+        assert float(jnp.max(jnp.abs(ef))) > 0.0
+
+    def test_wire_accounting_and_obs_mirror(self, plan, dist_batches):
+        from repro.distributed import comms
+        from repro.obs import metrics as obs_metrics
+        comms.STATS.reset()
+        self._train_comms(plan, dist_batches, "int8", "on", n_steps=2)
+        snap = comms.STATS.snapshot()
+        # >= 2x on-wire reduction at int8 over every recorded exchange
+        assert snap["compression_ratio"] >= 2.0, snap
+        assert snap["overlap"]["enabled"]
+        assert snap["overlap"]["occupancy"] == 0.5      # (m-1)/m, m=2
+        assert snap["overlap"]["deferred_grad_exchanges_per_step"] == 1
+        assert any(s["kind"] == "grad" for s in snap["sites"].values())
+        # the unique-rows (dedup) route carried the compressed lookups
+        assert snap["dedup_exchanges"] > 0
+        # mirrored into the one obs snapshot
+        assert obs_metrics.snapshot()["components"]["distributed.comms"][
+            "compression_ratio"] >= 2.0
 
 
 class TestShardedHLO:
